@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: wall-clock per call (CPU host; the Pallas TPU
+kernels run in interpret mode here — correctness-representative, timing
+only meaningful for the XLA reference paths)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    # attention: xla ref vs chunked (memory-lean) path
+    b, hq, hkv, s, d = 1, 8, 2, 1024, 64
+    q = jax.random.normal(ks[0], (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    f_ref = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    f_chu = jax.jit(lambda q, k, v: ref.attention_chunked(q, k, v,
+                                                          causal=True))
+    us_ref = _time(f_ref, q, k, v)
+    us_chu = _time(f_chu, q, k, v)
+    flops = 4 * b * hq * s * s * d
+    rows.append(("attention_xla_ref_1k", us_ref,
+                 f"gflops/s={flops / us_ref / 1e3:.1f}"))
+    rows.append(("attention_xla_chunked_1k", us_chu,
+                 f"gflops/s={flops / us_chu / 1e3:.1f}"))
+
+    # SSD scan: chunked-xla vs exact recurrence
+    bs, h, g, ss, p, n = 1, 8, 1, 2048, 64, 64
+    x = jax.random.normal(ks[0], (bs, h, ss, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, h, ss)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = jax.random.normal(ks[3], (bs, g, ss, n), jnp.float32)
+    cc = jax.random.normal(ks[4], (bs, g, ss, n), jnp.float32)
+    f_exact = jax.jit(lambda *A: ref.ssd_ref(*A))
+    f_chunk = jax.jit(lambda *A: ref.ssd_chunked_ref(*A, chunk=128))
+    us_exact = _time(f_exact, x, dt, a, bb, cc, iters=2)
+    us_chunk = _time(f_chunk, x, dt, a, bb, cc, iters=2)
+    rows.append(("ssd_exact_recurrence_2k", us_exact, "oracle"))
+    rows.append(("ssd_chunked_2k", us_chunk,
+                 f"speedup_vs_oracle={us_exact / us_chunk:.1f}x"))
+
+    # Pallas kernels in interpret mode (correctness-path timing)
+    q2 = q[:, :, :256]
+    k2, v2 = k[:, :, :256], v[:, :, :256]
+    us_pl = _time(lambda *A: ops.attention(*A, impl="pallas", block_q=128,
+                                           block_k=128), q2, k2, v2, iters=1)
+    rows.append(("flash_attention_pallas_interpret_256", us_pl,
+                 "interpret-mode (TPU target)"))
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) followed
+by the full table rows; roofline terms for the dry-run cells live in
+EXPERIMENTS.md (they come from launch/dryrun.py, not wall-clock).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import kernel_micro, noc_tables
+
+
+def _run_table(name, fn, verbose=True, **kw):
+    t0 = time.perf_counter()
+    rows, derived = fn(**kw)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived}")
+    if verbose and rows:
+        cols = list(rows[0].keys())
+        print("  # " + " | ".join(str(c) for c in cols))
+        for r in rows:
+            print("  # " + " | ".join(str(r[c]) for c in cols))
+    sys.stdout.flush()
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="smaller sim grid (CI)")
+    p.add_argument("--terse", action="store_true", help="CSV lines only")
+    args, _ = p.parse_known_args()
+    v = not args.terse
+
+    sizes = (16, 64) if args.quick else (16, 64, 256)
+    scal_sizes = (16, 32, 64, 128) if args.quick \
+        else (16, 32, 64, 128, 256, 512, 1024)
+
+    print("name,us_per_call,derived")
+    _run_table("table2_router_area_power",
+               noc_tables.table2_router_area_power, v)
+    _run_table("table3_relative_area", noc_tables.table3_relative_area, v)
+    _run_table("fig7_power_breakdown", noc_tables.fig7_power_breakdown, v)
+    _run_table("fig8_power_scaling", noc_tables.fig8_power_scaling, v)
+    _run_table("figs9_11_latency", noc_tables.figs9_11_latency, v,
+               sizes=sizes)
+    _run_table("figs12_14_throughput", noc_tables.figs12_14_throughput, v,
+               sizes=sizes)
+    _run_table("figs15_17_scalability", noc_tables.figs15_17_scalability, v,
+               sizes=scal_sizes)
+    _run_table("paper_validation_c1_c8", noc_tables.paper_validation, v)
+
+    for name, us, derived in kernel_micro.run():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

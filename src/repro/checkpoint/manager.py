@@ -1,0 +1,152 @@
+"""Checkpointing: atomic, optionally async, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json
+         <dir>/LATEST            (atomic pointer, written last)
+
+* **Atomicity**: a checkpoint is written to a tmp dir and os.rename()d into
+  place; LATEST is only updated afterwards, so a crash mid-save can never
+  corrupt the restore path (morph-packet resiliency at the fleet level).
+* **Async**: ``save(..., blocking=False)`` snapshots to host memory
+  synchronously (cheap) and writes in a background thread so the train loop
+  keeps stepping (compute/IO overlap).
+* **Elastic restore**: arrays are loaded host-side and ``device_put`` with
+  *target* shardings — the new mesh may have a different shape or size than
+  the one that saved (the "morphing" execution-region resize of §5.1).
+
+At 1000+ node scale the same layout shards per host (each host writes its
+addressable shards; manifest lists the union) — single-host here, noted in
+DESIGN.md; the API (save/restore/latest_step) is identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's savez cannot hold ml_dtypes; store them as same-width uint views
+# and record the true dtype in the manifest.
+_VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if str(arr.dtype) in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[str(arr.dtype)][1])
+        flat[key] = arr
+    return flat, dtypes
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    # -- save ------------------------------------------------------------------
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        """Snapshot ``tree`` (+ json-able ``extra``) at ``step``."""
+        self.wait()
+        host, dtypes = _flatten(tree)    # synchronous device->host snapshot
+        extra = dict(extra or {})
+
+        def _write():
+            tmp = self._step_dir(step) + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "extra": extra,
+                           "dtypes": dtypes,
+                           "keys": sorted(host.keys())}, f)
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+            os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                       os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for the *current* mesh (elastic resharding).
+        Returns (tree, extra)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        dtypes = manifest.get("dtypes", {})
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(paths))
+        leaves = []
+        for (path, leaf), shd in zip(paths, shard_leaves):
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+            arr = data[key]
+            if dtypes.get(key) in _VIEW_DTYPES:
+                arr = arr.view(_VIEW_DTYPES[dtypes[key]][0])
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"target {leaf.shape}")
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree.unflatten(treedef, leaves), manifest["extra"]

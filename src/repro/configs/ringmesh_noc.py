@@ -1,0 +1,20 @@
+"""The paper's own artifact: Ring-Mesh NoC experiment configuration
+(§7 experimental grid). Used by benchmarks/ and examples/noc_explorer.py."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NoCExperimentConfig:
+    sizes: tuple = (16, 32, 64, 128, 256, 512, 1024)
+    patterns: tuple = ("uniform", "bit_reversal", "transpose")
+    injection_rates: tuple = (0.25, 0.50, 0.75, 1.00)
+    cycles: int = 1500
+    warmup: int = 500
+    queue_depth: int = 2        # paper: 2 VCs per input port
+    src_queue_depth: int = 8
+    # paper operating regime (§1/§3): most traffic confined to rings
+    locality_ringlet: float = 0.75
+    locality_block: float = 0.20
+
+
+CONFIG = NoCExperimentConfig()

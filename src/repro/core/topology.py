@@ -1,0 +1,404 @@
+"""Topology construction + static route tables for the Ring-Mesh NoC.
+
+The simulator (`core.sim`) is a *queue-level* model: every virtual channel of
+every buffered port in the paper's microarchitecture is one FIFO queue.  The
+paper's routers and ring switches have **two VCs per input port** (Table 1,
+§4.2); we model each directed physical channel as two queue ids sharing one
+``phys`` wire — arbitration grants one flit per physical channel per cycle,
+while buffering and back-pressure are per (channel, VC) queue.
+
+A flit sitting in queue ``q``'s FIFO is "in that VC buffer of node
+``dst_node[q]``"; its next hop is fully precomputed into a dense
+``route_table[queue, dest_pe] -> next_queue`` numpy array at build time,
+because routing is static: XY dimension-order in the global mesh (§4.1) and
+shortest-direction in the bidirectional ringlets (§4.2).
+
+**VC assignment (deadlock freedom).**  The paper gives the source the VC
+assignment bit (§4.3) but does not spell out a deadlock-avoidance discipline
+for the ring<->mesh hierarchy; a naive assignment produces cyclic channel
+dependencies (ring -> RS2R -> mesh -> R2RS -> ring) that hard-deadlock under
+saturation.  We therefore use the VC bit as an up/down *phase* (the classic
+dateline argument, Dally & Seitz):
+
+  VC0 — "up" phase: PE -> ring -> master RS -> router, plus ring-local
+         traffic that has not passed the master in transit;
+  VC1 — "down" phase: router -> master RS -> ring -> PE, plus ring-local
+         traffic after it crosses the master RS (the ringlet's dateline).
+
+Within each VC the channel dependency graph is acyclic (ring paths never
+wrap past the master inside one VC; mesh XY-DoR is acyclic), so the whole
+NoC is provably deadlock-free.  On the 2D-mesh channels both VCs are used,
+split by destination-ringlet parity — the load-balancing role the paper
+gives its "dst 00/01 -> VC-0" rule.  This is recorded as an assumption
+change in DESIGN.md §8.
+
+Two topologies share the same mechanics:
+
+* ``build_ring_mesh(n_pes)`` — the paper's proposal (§3, Fig. 1).
+* ``build_flat_mesh(n_pes)`` — the flattened 2D-mesh baseline (§7).
+
+Arbitration priorities (paper §4.2: in-ring traffic first; rings' traffic
+processed first at the router; PE injection last):
+
+    RING  3 | RS2R  3 | MESH  2 | R2RS  2 | PE_SRC  1 | EJECT sink
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import packet as pk
+
+# Queue kinds
+PE_SRC = 0
+EJECT = 1
+RING = 2
+RS2R = 3
+R2RS = 4
+MESH = 5
+
+KIND_NAMES = {PE_SRC: "pe_src", EJECT: "eject", RING: "ring", RS2R: "rs2r",
+              R2RS: "r2rs", MESH: "mesh"}
+
+KIND_PRIORITY = {PE_SRC: 1, EJECT: 0, RING: 3, RS2R: 3, R2RS: 2, MESH: 2}
+
+INVALID = -1  # route table entry for dropped traffic (switched-off links)
+
+# Mesh-size ladder used in the paper: PEs -> (blocks_x, blocks_y).
+RING_MESH_GRIDS = {16: (1, 1), 32: (2, 1), 64: (2, 2), 128: (4, 2),
+                   256: (4, 4), 512: (8, 4), 1024: (8, 8)}
+# Flat mesh: one PE per router.
+FLAT_MESH_GRIDS = {16: (4, 4), 32: (8, 4), 64: (8, 8), 128: (16, 8),
+                   256: (16, 16), 512: (32, 16), 1024: (32, 32)}
+
+
+@dataclasses.dataclass
+class Topology:
+    """Static topology + routing, consumed by ``core.sim``.
+
+    All per-"link" arrays are per *queue* (one VC buffer of one directed
+    physical channel); ``link_phys`` groups the queues that share a wire.
+    """
+
+    name: str
+    n_pes: int
+    blocks_x: int
+    blocks_y: int
+    n_links: int               # number of queues
+    n_phys: int                # number of physical channels
+    link_kind: np.ndarray      # int8
+    link_vc: np.ndarray        # int8 (0/1; 0 for PE_SRC/EJECT)
+    link_phys: np.ndarray      # int32 physical channel id
+    link_src_node: np.ndarray  # int32 node id (-1 for PE_SRC virtual source)
+    link_dst_node: np.ndarray  # int32 node id (-1 for EJECT sinks)
+    link_prio: np.ndarray      # int32 arbitration priority
+    link_cap: np.ndarray       # int32 queue capacity
+    route_table: np.ndarray    # int32 [n_links, n_pes] -> next queue id
+    pe_src_link: np.ndarray    # int32 [n_pes]
+    pe_eject_link: np.ndarray  # int32 [n_pes]
+    n_routers: int = 0
+    n_ringlets: int = 0
+
+    @property
+    def is_sink(self) -> np.ndarray:
+        return self.link_kind == EJECT
+
+    def hops(self, src: int, dst: int, max_hops: int = 10_000) -> int:
+        """Network hops src->dst by walking the route table (excludes the
+        inject and eject buffer transfers, matching §6.1's link counting)."""
+        l = self.pe_src_link[src]
+        count = -1  # first move leaves the inject buffer: not a network link
+        while True:
+            nxt = self.route_table[l, dst]
+            if nxt == INVALID:
+                return -1
+            count += 1
+            if self.link_kind[nxt] == EJECT:
+                return count
+            l = nxt
+            if count > max_hops:
+                raise RuntimeError(f"routing loop {src}->{dst}")
+
+    def check_deadlock_free(self) -> bool:
+        """Verify the *realizable* queue-dependency graph is acyclic — the
+        Dally-Seitz condition.  Edges are collected by walking every
+        (source, destination) route, so only dependencies an actual flit can
+        exercise are included (the full table contains don't-care entries
+        for (queue, dest) pairs no flit ever occupies)."""
+        import networkx as nx
+        g = nx.DiGraph()
+        for src in range(self.n_pes):
+            for dst in range(self.n_pes):
+                if src == dst:
+                    continue
+                q = self.pe_src_link[src]
+                while True:
+                    nxt = self.route_table[q, dst]
+                    if nxt == INVALID or self.link_kind[nxt] == EJECT:
+                        break
+                    if self.link_kind[q] != PE_SRC:
+                        g.add_edge(int(q), int(nxt))
+                    q = nxt
+        return nx.is_directed_acyclic_graph(g)
+
+
+class _Builder:
+    """Accumulates queues; two VCs share one physical channel id."""
+
+    def __init__(self):
+        self.kind: list[int] = []
+        self.vc: list[int] = []
+        self.phys: list[int] = []
+        self.src: list[int] = []
+        self.dst: list[int] = []
+        self.cap: list[int] = []
+        self._n_phys = 0
+
+    def add(self, kind: int, src: int, dst: int, cap: int,
+            n_vcs: int = 1) -> tuple[int, ...]:
+        phys = self._n_phys
+        self._n_phys += 1
+        ids = []
+        for vc in range(n_vcs):
+            self.kind.append(kind)
+            self.vc.append(vc)
+            self.phys.append(phys)
+            self.src.append(src)
+            self.dst.append(dst)
+            self.cap.append(cap)
+            ids.append(len(self.kind) - 1)
+        return tuple(ids)
+
+
+def _ring_dir(i: int, j: int) -> int:
+    """Shortest direction on a 4-node ring: +1 = CW, -1 = CCW (CW on tie,
+    matching the paper's prioritised direction)."""
+    cw = (j - i) % pk.PES_PER_RINGLET
+    ccw = (i - j) % pk.PES_PER_RINGLET
+    return 1 if cw <= ccw else -1
+
+
+def build_ring_mesh(n_pes: int, queue_depth: int = 2,
+                    src_queue_depth: int = 4) -> Topology:
+    """The paper's ring-mesh: Fig. 1 instantiation for ``n_pes`` PEs."""
+    if n_pes not in RING_MESH_GRIDS:
+        raise ValueError(f"unsupported ring-mesh size {n_pes}")
+    bx, by = RING_MESH_GRIDS[n_pes]
+    n_blocks = bx * by
+    n_ringlets = n_blocks * pk.RINGLETS_PER_BLOCK
+    assert n_blocks * pk.PES_PER_BLOCK == n_pes
+
+    def rs_node(pe: int) -> int:
+        return pe
+
+    def router_node(block: int) -> int:
+        return n_pes + block
+
+    b = _Builder()
+    pe_src = np.zeros(n_pes, np.int32)
+    pe_eject = np.zeros(n_pes, np.int32)
+    ring_cw = np.zeros((n_pes, 2), np.int32)   # [pe, vc] CW queue leaving pe
+    ring_ccw = np.zeros((n_pes, 2), np.int32)
+    rs2r = np.zeros(n_ringlets, np.int32)          # up traffic: VC0 only used
+    r2rs = np.zeros(n_ringlets, np.int32)          # down traffic: VC1 only
+    mesh_q = {}  # (block_a, block_b) -> (vc0 id, vc1 id)
+
+    for pe in range(n_pes):
+        pe_src[pe] = b.add(PE_SRC, -1, rs_node(pe), src_queue_depth)[0]
+        pe_eject[pe] = b.add(EJECT, rs_node(pe), -1, 1 << 30)[0]
+
+    for pe in range(n_pes):
+        base = pe - (pe % pk.PES_PER_RINGLET)
+        nxt = base + (pe + 1) % pk.PES_PER_RINGLET
+        prv = base + (pe - 1) % pk.PES_PER_RINGLET
+        ring_cw[pe] = b.add(RING, rs_node(pe), rs_node(nxt), queue_depth, 2)
+        ring_ccw[pe] = b.add(RING, rs_node(pe), rs_node(prv), queue_depth, 2)
+
+    for ringlet in range(n_ringlets):
+        block = ringlet // pk.RINGLETS_PER_BLOCK
+        master = ringlet * pk.PES_PER_RINGLET  # position 0 is the master RS
+        # The master<->router channels carry a single phase each (up / down),
+        # so one VC buffer suffices on each (the paper's dedicated inject /
+        # eject buffers at the RS-router interface, Fig. 4).
+        rs2r[ringlet] = b.add(RS2R, rs_node(master), router_node(block),
+                              queue_depth)[0]
+        r2rs[ringlet] = b.add(R2RS, router_node(block), rs_node(master),
+                              queue_depth)[0]
+
+    for y in range(by):
+        for x in range(bx):
+            a = y * bx + x
+            for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                nx_, ny_ = x + dx, y + dy
+                if 0 <= nx_ < bx and 0 <= ny_ < by:
+                    c = ny_ * bx + nx_
+                    mesh_q[(a, c)] = b.add(MESH, router_node(a),
+                                           router_node(c), queue_depth, 2)
+
+    n_links = len(b.kind)
+    kind = np.array(b.kind, np.int8)
+
+    # ---- route table ------------------------------------------------------
+    d_pos = np.arange(n_pes) % pk.PES_PER_RINGLET
+    d_ringlet_g = np.arange(n_pes) // pk.PES_PER_RINGLET   # global ringlet id
+    d_block = np.arange(n_pes) // pk.PES_PER_BLOCK
+    d_bx = d_block % bx
+    d_by = d_block // bx
+
+    def mesh_vc(dest: int) -> int:
+        # Load-balance the two mesh VCs by destination-ringlet parity — the
+        # role of the paper's "dst 00/01 -> VC-0" rule (deadlock-safe: XY).
+        return int(d_ringlet_g[dest] % 2)
+
+    def route_at_rs(pe: int, vc_in: int, from_kind: int, dest: int) -> int:
+        """Next queue for a flit at ring switch ``pe`` (phase-aware)."""
+        pos = pe % pk.PES_PER_RINGLET
+        ringlet = pe // pk.PES_PER_RINGLET
+        if dest // pk.PES_PER_RINGLET == ringlet:
+            dpos = int(d_pos[dest])
+            if dpos == pos:
+                return pe_eject[pe]
+            step = _ring_dir(pos, dpos)
+            if from_kind == R2RS:
+                vc_out = 1                      # down phase
+            elif pos == 0 and from_kind == RING:
+                vc_out = 1                      # crossed the dateline (master)
+            elif from_kind == PE_SRC:
+                vc_out = 0                      # fresh injection, up phase
+            else:
+                vc_out = vc_in                  # keep phase inside the ring
+        else:
+            if pos == 0:                        # master: hand to the router
+                return rs2r[ringlet]
+            step = _ring_dir(pos, 0)
+            vc_out = 0                          # up phase toward the master
+        row = ring_cw if step == 1 else ring_ccw
+        return int(row[pe, vc_out])
+
+    def route_at_router(block: int, dest: int) -> int:
+        """XY dimension-order routing at mesh router ``block`` (§4.1)."""
+        x, y = block % bx, block // bx
+        tx, ty = int(d_bx[dest]), int(d_by[dest])
+        if (x, y) == (tx, ty):
+            ringlet = (block * pk.RINGLETS_PER_BLOCK
+                       + int(d_ringlet_g[dest]) % pk.RINGLETS_PER_BLOCK)
+            return int(r2rs[ringlet])
+        if x != tx:
+            step = (1, 0) if tx > x else (-1, 0)
+        else:
+            step = (0, 1) if ty > y else (0, -1)
+        nbr = (y + step[1]) * bx + (x + step[0])
+        return int(mesh_q[(block, nbr)][mesh_vc(dest)])
+
+    route = np.full((n_links, n_pes), INVALID, np.int32)
+    dst_node = np.array(b.dst, np.int32)
+    vc_arr = np.array(b.vc, np.int8)
+    for q in range(n_links):
+        node = dst_node[q]
+        if node < 0:
+            continue
+        if node < n_pes:
+            for dest in range(n_pes):
+                route[q, dest] = route_at_rs(int(node), int(vc_arr[q]),
+                                             int(kind[q]), dest)
+        else:
+            block = int(node - n_pes)
+            for dest in range(n_pes):
+                route[q, dest] = route_at_router(block, dest)
+
+    prio = np.array([KIND_PRIORITY[int(k)] for k in kind], np.int32)
+    return Topology(
+        name=f"ring_mesh_{n_pes}",
+        n_pes=n_pes, blocks_x=bx, blocks_y=by,
+        n_links=n_links, n_phys=b._n_phys,
+        link_kind=kind, link_vc=vc_arr,
+        link_phys=np.array(b.phys, np.int32),
+        link_src_node=np.array(b.src, np.int32),
+        link_dst_node=dst_node,
+        link_prio=prio,
+        link_cap=np.array(b.cap, np.int32),
+        route_table=route,
+        pe_src_link=pe_src,
+        pe_eject_link=pe_eject,
+        n_routers=n_blocks,
+        n_ringlets=n_ringlets,
+    )
+
+
+def build_flat_mesh(n_pes: int, queue_depth: int = 2,
+                    src_queue_depth: int = 4) -> Topology:
+    """Flattened 2D-mesh baseline: one conventional 5-port router per PE,
+    two VCs per input port (Table 1), VC split by destination parity."""
+    if n_pes not in FLAT_MESH_GRIDS:
+        raise ValueError(f"unsupported flat-mesh size {n_pes}")
+    rx, ry = FLAT_MESH_GRIDS[n_pes]
+    assert rx * ry == n_pes
+
+    b = _Builder()
+    pe_src = np.zeros(n_pes, np.int32)
+    pe_eject = np.zeros(n_pes, np.int32)
+    for pe in range(n_pes):
+        pe_src[pe] = b.add(PE_SRC, -1, pe, src_queue_depth)[0]
+        pe_eject[pe] = b.add(EJECT, pe, -1, 1 << 30)[0]
+
+    mesh_q = {}
+    for y in range(ry):
+        for x in range(rx):
+            a = y * rx + x
+            for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                nx_, ny_ = x + dx, y + dy
+                if 0 <= nx_ < rx and 0 <= ny_ < ry:
+                    c = ny_ * rx + nx_
+                    mesh_q[(a, c)] = b.add(MESH, a, c, queue_depth, 2)
+
+    n_links = len(b.kind)
+    kind = np.array(b.kind, np.int8)
+
+    def route_at_router(r: int, dest: int) -> int:
+        x, y = r % rx, r // rx
+        tx, ty = dest % rx, dest // rx
+        if (x, y) == (tx, ty):
+            return int(pe_eject[r])
+        if x != tx:
+            step = (1, 0) if tx > x else (-1, 0)
+        else:
+            step = (0, 1) if ty > y else (0, -1)
+        nbr = (y + step[1]) * rx + (x + step[0])
+        return int(mesh_q[(r, nbr)][dest % 2])
+
+    route = np.full((n_links, n_pes), INVALID, np.int32)
+    dst_node = np.array(b.dst, np.int32)
+    for q in range(n_links):
+        node = dst_node[q]
+        if node < 0:
+            continue
+        for dest in range(n_pes):
+            route[q, dest] = route_at_router(int(node), dest)
+
+    prio = np.array([KIND_PRIORITY[int(k)] for k in kind], np.int32)
+    return Topology(
+        name=f"flat_mesh_{n_pes}",
+        n_pes=n_pes, blocks_x=rx, blocks_y=ry,
+        n_links=n_links, n_phys=b._n_phys,
+        link_kind=kind,
+        link_vc=np.array(b.vc, np.int8),
+        link_phys=np.array(b.phys, np.int32),
+        link_src_node=np.array(b.src, np.int32),
+        link_dst_node=dst_node,
+        link_prio=prio,
+        link_cap=np.array(b.cap, np.int32),
+        route_table=route,
+        pe_src_link=pe_src,
+        pe_eject_link=pe_eject,
+        n_routers=n_pes,
+        n_ringlets=0,
+    )
+
+
+def build(name: str, n_pes: int, **kw) -> Topology:
+    if name in ("ring_mesh", "ringmesh", "proposed"):
+        return build_ring_mesh(n_pes, **kw)
+    if name in ("flat_mesh", "mesh", "2dmesh", "baseline"):
+        return build_flat_mesh(n_pes, **kw)
+    raise ValueError(f"unknown topology {name!r}")

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticCorpus, TokenPipeline,
+                                 make_pipeline)
+
+__all__ = ["DataConfig", "SyntheticCorpus", "TokenPipeline", "make_pipeline"]

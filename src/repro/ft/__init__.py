@@ -1,0 +1,4 @@
+from repro.ft.trainer import (FaultTolerantTrainer, StragglerDetector,
+                              TrainerConfig)
+
+__all__ = ["FaultTolerantTrainer", "StragglerDetector", "TrainerConfig"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout (per the kernels/ contract):
+    flash_attention.py — pl.pallas_call + BlockSpec flash attention
+                         (causal / GQA / sliding window)
+    ssd_scan.py        — Mamba-2 SSD chunked scan (state in VMEM scratch)
+    ops.py             — jit'd wrappers with the xla|pallas impl switch
+    ref.py             — pure-jnp oracles used by the allclose test sweeps
+
+The Ring-Mesh paper itself contributes no matmul-shaped compute (a 43-bit
+router is control logic, not MXU work — see DESIGN.md §2); these kernels
+cover the attention/SSM hot spots of the architectures the system serves.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import attention, ssd
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "flash_attention", "ssd_scan", "attention", "ssd"]

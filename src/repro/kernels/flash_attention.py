@@ -1,0 +1,151 @@
+"""Flash attention Pallas TPU kernel (causal / GQA / sliding-window).
+
+TPU-native adaptation notes (DESIGN.md §2): blocks are sized for VMEM and
+MXU alignment — the (block_q x d) query tile and (block_k x d) key/value
+tiles live in VMEM; the score tile (block_q x block_k) hits the MXU with
+lane-dim multiples of 128.  The grid is (batch*q_heads, q_blocks, kv_blocks)
+with the kv dimension innermost: TPU grids execute sequentially, so the
+float32 running (max, sum, acc) state is carried across kv steps in VMEM
+scratch — the online-softmax recurrence of Flash Attention rethought as a
+systolic sweep instead of a CUDA thread-block loop.
+
+Sliding-window attention only pays for the kv blocks inside the window:
+out-of-window tiles are skipped with `pl.when`, which is what makes the
+h2o-danube / long-context decode shapes sub-quadratic in practice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Global positions; decode-style offset puts queries at the kv tail.
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (seq_k - seq_q)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # Tile-level skip: entirely above the causal diagonal or entirely
+    # outside the sliding window -> no compute, no softmax update.
+    q_lo = iq * block_q + (seq_k - seq_q)
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_lo <= q_hi
+    if window is not None:
+        k_hi = k_lo + block_k - 1
+        needed &= k_hi > q_lo - window
+
+    @pl.when(needed)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                # kill NEG_INF underflow
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Returns (B, Hq, Sq, D).
+
+    GQA folds the query-head -> kv-head mapping into the k/v index maps, so
+    grouped heads stream the same kv tiles without materialising repeats.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, \
+        f"seq ({sq},{skv}) must tile by ({block_q},{block_k})"
+    grid = (b * hq, sq // block_q, skv // block_k)
+
+    qs = q.reshape(b * hq, sq, d)
+    ks = k.reshape(b * hkv, skv, d)
+    vs = v.reshape(b * hkv, skv, d)
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_map(bh, iq, ik):
+        return ((bh // hq) * hkv + (bh % hq) // group, ik, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=sq, seq_k=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(b, hq, sq, d)

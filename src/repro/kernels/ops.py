@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels (the `ops.py` layer).
+
+Every op has an ``impl`` switch:
+
+* ``"xla"``     — pure-jnp math (identical numerics class); used on the CPU
+                  container, inside the multi-pod dry-run lowering, and as
+                  the always-available fallback.
+* ``"pallas"``  — the Pallas TPU kernel (``interpret=True`` on CPU so the
+                  kernel body is executed and validated everywhere).
+* ``"auto"``    — pallas on TPU backends, xla elsewhere.
+
+The model zoo calls these wrappers only; nothing downstream knows which
+implementation ran.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _ssd
+
+_IMPLS = ("auto", "xla", "pallas", "pallas_interpret")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, impl: str = "auto",
+              block_q: int = 128, block_k: int = 128):
+    """GQA attention with optional causal mask and sliding window.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret" or not _on_tpu()))
+
+
+def ssd(x, dt, a, b, c, *, chunk: int = 128, impl: str = "auto"):
+    """Mamba-2 SSD scan. x: (B,H,S,P), dt: (B,H,S), a: (H,),
+    b/c: (B,G,S,N) -> (B,H,S,P) float32-accumulated, x.dtype out.
+
+    Sequences that do not tile by ``chunk`` are zero-padded on the right
+    (causal: the pad cannot affect the real prefix) and sliced back."""
+    impl = _resolve(impl)
+    s = x.shape[2]
+    chunk = min(chunk, s) if s % chunk and s < chunk else chunk
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    if impl == "xla":
+        out = _ref.ssd_chunked_ref(x, dt, a, b, c, chunk=chunk).astype(x.dtype)
+    else:
+        out = _ssd.ssd_scan(
+            x, dt, a, b, c, chunk=chunk,
+            interpret=(impl == "pallas_interpret" or not _on_tpu()))
+    return out[:, :, :s] if pad else out

@@ -1,0 +1,192 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` layer).
+
+These are written for clarity and exactness, not speed: they are the ground
+truth the kernels are validated against (tests sweep shapes/dtypes and
+assert_allclose kernel-vs-ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + causal + sliding window)
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None, q_offset=None):
+    """Reference multi-head attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    window: sliding-window size W — query t attends to keys in
+        (t - W, t] (Mistral-style SWA); requires causal semantics.
+    q_offset: absolute position of q[0] in the kv sequence (may be traced;
+        used for decode against a fixed-size cache buffer — the causal mask
+        then also excludes the uninitialized cache tail).
+    Returns (B, Hq, Sq, D) in q.dtype; softmax in float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    # In decode, q positions sit at the END of the kv sequence (or at the
+    # explicit q_offset into a larger cache buffer).
+    q_pos = jnp.arange(sq) + (q_offset if q_offset is not None else skv - sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space dual) — exact sequential recurrence
+# ---------------------------------------------------------------------------
+def ssd_ref(x, dt, a, b, c):
+    """Reference SSD via the exact per-step recurrence.
+
+    x:  (B, H, S, P)   inputs per head (P = head dim)
+    dt: (B, H, S)      post-softplus step sizes (> 0)
+    a:  (H,)           negative per-head decay (A = -exp(a_log))
+    b:  (B, G, S, N)   input projections (G groups, heads share G)
+    c:  (B, G, S, N)   output projections
+    Returns y: (B, H, S, P) float32.
+
+        state_t = exp(dt_t * a) * state_{t-1} + dt_t * x_t ⊗ b_t
+        y_t     = c_t · state_t
+    """
+    bsz, h, s, p = x.shape
+    _, g, _, n = b.shape
+    assert h % g == 0
+    rep = h // g
+    bb = jnp.repeat(b, rep, axis=1).astype(jnp.float32)   # (B,H,S,N)
+    cc = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a[None, :, None])                  # (B,H,S)
+
+    def step(state, inputs):
+        da_t, dbx_t, c_t = inputs      # (B,H), (B,H,P,N), (B,H,N)
+        state = da_t[..., None, None] * state + dbx_t
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    dbx = jnp.einsum("bhs,bhsp,bhsn->sbhpn", dtf, xf, bb)
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(da, 2, 0), dbx, jnp.moveaxis(cc, 2, 0)))
+    return jnp.moveaxis(ys, 0, 2)  # (B,H,S,P)
+
+
+def ssd_chunked_ref(x, dt, a, b, c, chunk: int = 16):
+    """Chunked SSD in plain jnp — the same algorithm the Pallas kernel uses
+    (intra-chunk quadratic + inter-chunk state passing). Used to validate
+    the chunking math independently of Pallas."""
+    bsz, h, s, p = x.shape
+    _, g, _, n = b.shape
+    rep = h // g
+    assert s % chunk == 0
+    nc = s // chunk
+    bb = jnp.repeat(b, rep, axis=1).astype(jnp.float32)
+    cc = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    l = dtf * a[None, :, None]                              # (B,H,S) log-decay
+
+    def chunk_fn(state, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 2)
+        lc = sl(l)                                          # (B,H,L)
+        cum = jnp.cumsum(lc, axis=-1)
+        xc, dc = sl(xf), sl(dtf)
+        bc, ccx = sl(bb), sl(cc)
+        # intra-chunk: M[t,u] = (c_t.b_u) exp(cum_t - cum_u) dt_u, u <= t
+        m = jnp.einsum("bhtn,bhun->bhtu", ccx, bc)
+        decay = jnp.exp(cum[..., :, None] - cum[..., None, :])
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(tri[None, None], m * decay * dc[..., None, :], 0.0)
+        y = jnp.einsum("bhtu,bhup->bhtp", m, xc)
+        # inter-chunk: contribution of the incoming state
+        y += jnp.einsum("bht,bhtn,bhnp->bhtp", jnp.exp(cum), ccx, state)
+        # state update
+        dec_out = jnp.exp(cum[..., -1:] - cum)              # (B,H,L)
+        state = jnp.exp(cum[..., -1])[..., None, None] * state + \
+            jnp.einsum("bhu,bhu,bhun,bhup->bhnp", dec_out, dc, bc, xc)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(chunk_fn, state0, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, s, p)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention for the XLA path ("flash-in-XLA"): never materializes
+# the full (Sq x Skv) score tensor.  Queries are processed in chunks with
+# jax.checkpoint, so the backward pass recomputes each chunk's scores
+# instead of storing them -> O(S) residuals.  With a sliding window only the
+# in-window KV span is sliced per chunk (sub-quadratic compute for SWA).
+# ---------------------------------------------------------------------------
+def attention_chunked(q, k, v, *, causal: bool = True,
+                      window: int | None = None,
+                      scale: float | None = None, q_offset=None,
+                      chunk_q: int = 512):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    if q_offset is None:
+        q_offset = skv - sq
+    chunk_q = min(chunk_q, sq)
+    pad_q = (-sq) % chunk_q
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    nq = (sq + pad_q) // chunk_q
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+
+    use_window_slice = window is not None and window + chunk_q < skv
+    span = min(window + chunk_q, skv) if window is not None else skv
+
+    def chunk_fn(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * chunk_q, chunk_q, 2)
+        q_pos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+        if use_window_slice:
+            start = jnp.clip(q_offset + i * chunk_q - window + 1, 0,
+                             skv - span)
+            ks = jax.lax.dynamic_slice_in_dim(kk, start, span, 2)
+            vs = jax.lax.dynamic_slice_in_dim(vv, start, span, 2)
+            k_pos = start + jnp.arange(span)
+        else:
+            ks, vs = kk, vv
+            k_pos = jnp.arange(skv)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qs.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        mask = jnp.ones((chunk_q, k_pos.shape[0]), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask[None, None], p, 0.0)   # fully-masked pad rows
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vs.astype(jnp.float32))
+
+    out = jax.lax.map(jax.checkpoint(chunk_fn), jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq + pad_q, d)
+    return out[:, :, :sq].astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Mamba-2 SSD (state-space dual) chunked-scan Pallas TPU kernel.
+
+Algorithm (Dao & Gu, arXiv:2405.21060): split the sequence into chunks of
+length L.  Within a chunk the SSD recurrence collapses to an attention-like
+quadratic form
+
+    y[t] = sum_{u<=t} (c_t . b_u) * exp(cum_t - cum_u) * dt_u * x_u
+         + c_t . (exp(cum_t) * state_in)
+    state_out = exp(cum_L) * state_in
+              + sum_u exp(cum_L - cum_u) * dt_u * (b_u (x) x_u)
+
+with cum = cumsum(dt * a) the per-chunk log-decay.  All exponents are <= 0
+(a < 0), so the math is numerically safe without max-subtraction.
+
+TPU mapping: grid = (batch, heads, chunks), chunk dim innermost — TPU grids
+run sequentially, so the (N x P) inter-chunk state is carried in float32
+VMEM scratch (the recurrent hop of the "ring" — state passing is exactly
+the local ring-traffic pattern of the paper, one neighbour at a time, while
+the quadratic intra-chunk block feeds the MXU).  Chunk length and head dim
+are chosen as multiples of the 128-lane MXU tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (L,)
+    a = a_ref[0].astype(jnp.float32)           # scalar decay (negative)
+    b = b_ref[0, 0].astype(jnp.float32)        # (L, N)
+    c = c_ref[0, 0].astype(jnp.float32)        # (L, N)
+
+    l = dt * a                                  # (L,) log-decays, <= 0
+    cum = jnp.cumsum(l)                         # (L,)
+
+    # intra-chunk quadratic term (MXU): M[t,u] = (c_t.b_u) e^{cum_t-cum_u} dt_u
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(u_idx <= t_idx, scores * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # incoming-state term: y += e^{cum_t} * (c_t . state_in)
+    state = state_ref[...]                      # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: state = e^{cum_L} state + sum_u e^{cum_L-cum_u} dt_u b_u x_u
+    w = jnp.exp(cum[-1] - cum) * dt             # (L,)
+    state_ref[...] = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        b * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False):
+    """Chunked SSD scan.
+
+    x:  (B, H, S, P);  dt: (B, H, S);  a: (H,) negative decays;
+    b, c: (B, G, S, N) with H % G == 0.
+    Returns y: (B, H, S, P) in x.dtype.
+    """
+    bsz, h, s, p = x.shape
+    _, g, _, n = b.shape
+    assert h % g == 0
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} must tile by chunk {chunk}"
+    nc = s // chunk
+    grid = (bsz, h, nc)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda ib, ih, ic: (ib, ih, ic)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda ib, ih, ic: (ib, ih // (h // g), ic, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda ib, ih, ic: (ib, ih // (h // g), ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda ib, ih, ic: (ib, ih, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return out

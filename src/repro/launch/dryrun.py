@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init) — launcher contract for the multi-pod dry-run only.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and record memory / cost / collective data.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun
+
+Every record lands in experiments/dryrun/<arch>__<shape>__<mesh>.json so
+partial sweeps resume for free (--force recomputes).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.dist import context
+from repro.launch import hlo as hlo_mod
+from repro.launch import mesh as mesh_mod
+from repro.launch import shapes as shp
+from repro.launch import steps as steps_mod
+
+# TPU v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             rules=None, attn_override=None, extra_tag: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = shp.make_cell(arch, shape)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    rec: dict = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "tag": extra_tag,
+    }
+    ok, why = shp.cell_supported(arch, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        with context.use_mesh(mesh):
+            case = steps_mod.make_case(cfg, cell, mesh, rules=rules,
+                                       attn_override=attn_override)
+            lowered = case.fn.lower(*case.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            text = compiled.as_text()
+        coll = hlo_mod.collective_bytes(text)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if mem is not None and hasattr(mem, k)
+            },
+            flops_raw=float(cost.get("flops", 0.0)) if cost else 0.0,
+            bytes_accessed_raw=float(cost.get("bytes accessed", 0.0))
+            if cost else 0.0,
+            collectives=coll,
+            op_census=hlo_mod.op_census(text),
+            fusions=hlo_mod.fusion_count(text),
+        )
+        # XLA counts scan bodies once -> correct with per-stage probes
+        from repro.launch import probe as probe_mod
+        rec["accum_steps"] = case.accum
+        with context.use_mesh(mesh):
+            corr = probe_mod.corrected_costs(
+                case.cfg, cell, mesh,
+                {"flops": rec["flops_raw"],
+                 "bytes_accessed": rec["bytes_accessed_raw"],
+                 "collective_bytes": coll["total_bytes"]},
+                accum=case.accum)
+        rec["flops"] = corr["corrected"]["flops"]
+        rec["bytes_accessed"] = corr["corrected"]["bytes_accessed"]
+        rec["collective_bytes"] = corr["corrected"]["collective_bytes"]
+        rec["probes"] = corr["probes"]
+        # roofline terms (seconds)
+        rec["roofline"] = roofline_terms(rec, cfg)
+    except Exception as e:  # noqa: BLE001 — report, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def roofline_terms(rec: dict, cfg) -> dict:
+    chips = rec["chips"]
+    flops = rec.get("flops", rec.get("flops_raw", 0.0))
+    byts = rec.get("bytes_accessed", rec.get("bytes_accessed_raw", 0.0))
+    coll = rec.get("collective_bytes",
+                   rec.get("collectives", {}).get("total_bytes", 0))
+    # cost_analysis is per-partition module on SPMD: flops/bytes are for one
+    # device's program; collective bytes were summed over ops (per-device).
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    tokens = rec["global_batch"] * (rec["seq_len"]
+                                    if rec["kind"] != "decode" else 1)
+    model_flops = cfg.model_flops_per_token(
+        train=rec["kind"] == "train") * tokens
+    terms.update(
+        dominant=dom,
+        model_flops=model_flops,
+        hlo_flops_total=flops * chips,
+        useful_flops_ratio=(model_flops / (flops * chips)
+                            if flops else 0.0),
+        bound_s=max(compute_s, memory_s, collective_s),
+    )
+    return terms
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--tag", default="")
+    args = p.parse_args()
+
+    archs = configs.all_archs() if args.arch == "all" else [args.arch]
+    shapes_list = list(shp.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes_list:
+            for multi in meshes:
+                tagpart = f"__{args.tag}" if args.tag else ""
+                fname = os.path.join(
+                    args.out,
+                    f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                    f"{tagpart}.json")
+                if os.path.exists(fname) and not args.force:
+                    with open(fname) as f:
+                        rec = json.load(f)
+                    print(f"[cached] {fname}: {rec['status']}")
+                    results.append(rec)
+                    continue
+                rec = run_cell(arch, shape, multi, extra_tag=args.tag)
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"dom={r['dominant']} "
+                             f"bound={r['bound_s']:.3e}s "
+                             f"flops={rec['flops']:.3e}")
+                    mem = rec.get("memory", {})
+                    if "temp_size_in_bytes" in mem:
+                        extra += (f" temp/dev="
+                                  f"{mem['temp_size_in_bytes']/2**30:.2f}GiB"
+                                  f" args/dev="
+                                  f"{mem['argument_size_in_bytes']/2**30:.2f}"
+                                  f"GiB")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status}] {arch}/{shape}/"
+                      f"{'multi' if multi else 'single'}{extra}", flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: hypothesis -> change -> measure -> validate.
+
+Three cells (worst roofline fraction / most collective-bound / most
+paper-representative) are re-lowered under controlled variants; every
+record lands in experiments/hillclimb/ as JSON for EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell train
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell decode
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell collective
+"""
+import argparse
+import json
+
+from repro.launch import dryrun
+
+OUT = "experiments/hillclimb"
+
+
+def record(name: str, rec: dict) -> dict:
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        mem = rec.get("memory", {})
+        print(f"[{name}] dom={r['dominant']} bound={r['bound_s']:.3e}s "
+              f"compute={r['compute_s']:.3e} memory={r['memory_s']:.3e} "
+              f"collective={r['collective_s']:.3e} "
+              f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"frac={r['compute_s']/max(r['bound_s'],1e-30):.3f}",
+              flush=True)
+    else:
+        print(f"[{name}] {rec['status']}: {rec.get('error','')[:200]}",
+              flush=True)
+    return rec
+
+
+def climb_train() -> None:
+    """command-r-plus-104b/train_4k — the paper-representative cell
+    (hierarchical traffic shaping of the heaviest training collectives)."""
+    arch, shape = "command-r-plus-104b", "train_4k"
+    # it0 = sweep baseline (act_shard=model_seq, f32 FSDP gather, accum=8)
+    record("train_it1_bf16_gather", dryrun.run_cell(
+        arch, shape, False,
+        cfg_overrides={"fsdp_gather_dtype": "bf16"}))
+    record("train_it2_actshard_model_d", dryrun.run_cell(
+        arch, shape, False,
+        cfg_overrides={"act_shard": "model_d"}))
+    record("train_it3_bf16_plus_seq", dryrun.run_cell(
+        arch, shape, False,
+        cfg_overrides={"fsdp_gather_dtype": "bf16",
+                       "act_shard": "model_seq"}))
+
+
+def climb_decode() -> None:
+    """qwen2-7b/decode_32k — worst roofline fraction (cache streaming)."""
+    arch, shape = "qwen2-7b", "decode_32k"
+    record("decode_it1_seqshard_cache", dryrun.run_cell(
+        arch, shape, False, attn_override="seq_shard"))
+    record("decode_it2_window1024", dryrun.run_cell(
+        arch, shape, False,
+        cfg_overrides={"sliding_window": 4096}))
+
+
+def climb_collective() -> None:
+    """Pod-boundary bytes: flat psum vs hierarchical ring-mesh reduce vs
+    int8-compressed pod hop (the paper's schedule, measured in HLO)."""
+    import functools
+    import jax
+    from repro import configs
+    from repro.dist import context, data_parallel
+    from repro.launch import hlo as hlo_mod
+    from repro.launch import mesh as mesh_mod
+    from repro.models import loss_fn, abstract_params, smoke_config
+    import jax.numpy as jnp
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=True)
+    cfg = configs.get("h2o-danube-1.8b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, act_shard="none", remat=False)
+    params_ab = abstract_params(cfg)
+    b, s = 64, 512
+    batch_ab = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    lf = functools.partial(loss_fn, cfg)
+    out = {}
+    for name, kw in (
+        ("flat", dict(schedule="flat")),
+        ("hier", dict(schedule="hier")),
+        ("hier_int8", dict(schedule="hier", compress=True)),
+    ):
+        with context.use_mesh(mesh):
+            fn = data_parallel.make_dp_grad_fn(lf, mesh, **kw)
+            jfn = jax.jit(fn)
+            compiled = jfn.lower(params_ab, batch_ab).compile()
+            text = compiled.as_text()
+        coll = hlo_mod.collective_bytes(text)
+        out[name] = coll
+        print(f"[collective/{name}] total={coll['total_bytes']/2**30:.2f}GiB "
+              f"mix={coll['bytes_by_kind']}", flush=True)
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "collective_schedules.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--cell", choices=["train", "decode", "collective",
+                                      "all"], default="all")
+    args = p.parse_args()
+    if args.cell in ("train", "all"):
+        climb_train()
+    if args.cell in ("decode", "all"):
+        climb_decode()
+    if args.cell in ("collective", "all"):
+        climb_collective()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""HLO text analysis: collective bytes, op census, remat duplication.
+
+``cost_analysis()`` has no collective accounting, so the roofline's third
+term comes from parsing the post-SPMD optimized HLO.  In optimized dumps
+operands are bare ``%name`` references, so per-op *operand* bytes are
+recovered from the result shape and the replica-group size:
+
+    all-reduce / all-to-all / collective-permute : operand == result
+    all-gather                                   : operand == result / gs
+    reduce-scatter                               : operand == result * gs
+
+Reported per device (one SPMD module = one device's program), which is what
+the roofline's ``collective_bytes / (chips x link_bw)`` expects after
+multiplying back by chip count — we instead keep per-device bytes and use
+per-chip link bandwidth directly (equivalent, documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device operand bytes per collective kind (see module docstring)."""
+    by_kind: dict[str, int] = defaultdict(int)
+    counts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        result_bytes = sum(_shape_bytes(sm.group(1), sm.group(2))
+                           for sm in _SHAPE_RE.finditer(m.group(1)))
+        gs = _group_size(line)
+        if kind == "all-gather":
+            nbytes = result_bytes // max(gs, 1)
+        elif kind == "reduce-scatter":
+            nbytes = result_bytes * gs
+        else:
+            nbytes = result_bytes
+        by_kind[kind] += nbytes
+        counts[kind] += 1
+    return {"bytes_by_kind": dict(by_kind),
+            "count_by_kind": dict(counts),
+            "total_bytes": int(sum(by_kind.values()))}
+
+
+def op_census(hlo_text: str, top: int = 12) -> list[tuple[str, int]]:
+    ops = Counter()
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+"
+                      r"([a-z][a-z0-9-]*)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops.most_common(top)
+
+
+def fusion_count(hlo_text: str) -> int:
+    return hlo_text.count(" fusion(")

@@ -1,0 +1,294 @@
+"""Per-stage cost probes: correct XLA's scan-body undercounting.
+
+``compiled.cost_analysis()`` counts the body of a ``lax.scan`` / ``fori_loop``
+ONCE, regardless of trip count (verified empirically: a scan of 8 matmuls
+reports one matmul's flops).  All model layers live inside stage scans, so
+the dry-run lowers, per stage, a one-repeat probe of the exact unit body
+(same shapes, same sharding rules, fwd+bwd for train cells) and corrects:
+
+    total = main_module + sum_stages probe_stage x (reps - 1)
+            + loss_chunk_probe x (n_chunks - 1)          [train]
+            + encoder_probe x (enc_layers - 1)           [whisper]
+
+The same correction applies to bytes-accessed and to collective bytes
+parsed from the probe's HLO.  Probes are single-layer modules — they
+compile in seconds even against the 512-device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding
+from repro.launch import hlo as hlo_mod
+from repro.launch import shapes as shp
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def _analyze(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": hlo_mod.collective_bytes(text)["total_bytes"],
+    }
+
+
+def _zero() -> dict:
+    return {"flops": 0.0, "bytes_accessed": 0.0, "collective_bytes": 0}
+
+
+def _scaled(d: dict, k: float) -> dict:
+    return {key: type(val)(val * k) for key, val in d.items()}
+
+
+def _added(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in a}
+
+
+def _param_shardings_for(metas, mesh):
+    specs = L.tree_map_meta(
+        lambda m: sharding.spec_for_axes(m.axes, mesh, shape=m.shape), metas)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _x_sharding(mesh, shape):
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    model = "model" if "model" in mesh.axis_names else None
+    return NamedSharding(mesh, sharding.fit_spec(P(b, None, model), shape,
+                                                 mesh))
+
+
+def stage_probe(cfg: ModelConfig, cell: shp.Cell, mesh, stage_idx: int,
+                serve_dtype=jnp.bfloat16) -> dict:
+    """Cost of ONE repetition of stage ``stage_idx`` under this cell."""
+    unit, _reps = cfg.stages[stage_idx]
+    is_train = cell.kind == "train"
+    is_decode = cell.kind == "decode"
+    b = cell.global_batch
+    s = 1 if is_decode else cell.seq_len
+
+    unit_meta = {str(i): M._block_meta(cfg, k) for i, k in enumerate(unit)}
+    metas1 = L.stack_metas(unit_meta, 1)
+    p_ab = L.abstract(metas1)
+    if not is_train:
+        p_ab = jax.tree.map(
+            lambda t: jax.ShapeDtypeStruct(
+                t.shape, serve_dtype if t.dtype == jnp.float32 else t.dtype),
+            p_ab)
+    p_sh = _param_shardings_for(metas1, mesh)
+
+    x_ab = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    x_sh = _x_sharding(mesh, x_ab.shape)
+
+    needs_memory = "cross" in unit
+    mem_len = cfg.encoder_seq or cfg.n_img_tokens
+    mem_ab = (jax.ShapeDtypeStruct((b, mem_len, cfg.d_model), jnp.bfloat16)
+              if needs_memory and not is_decode else None)
+
+    shared_ab = None
+    shared_sh = None
+    if "hybrid" in unit:
+        sh_meta = {"attn": L.attn_meta(cfg), "mlp": L.mlp_meta(cfg)}
+        shared_ab = L.abstract(sh_meta)
+        if not is_train:
+            shared_ab = jax.tree.map(
+                lambda t: jax.ShapeDtypeStruct(
+                    t.shape,
+                    serve_dtype if t.dtype == jnp.float32 else t.dtype),
+                shared_ab)
+        shared_sh = _param_shardings_for(sh_meta, mesh)
+
+    cache_ab = None
+    cache_sh = None
+    if is_decode:
+        cache_ab = M.stage_cache(cfg, unit, 1, b, cell.seq_len,
+                                 abstract=True)
+        seq_shard = cell.shape == shp.LONG_500K
+        # reuse the global cache-spec logic on this single-stage subtree
+        full_specs = sharding.cache_specs(cfg, mesh, b, cell.seq_len,
+                                          seq_shard=seq_shard)[stage_idx]
+        cache_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                                full_specs)
+
+    positions = jnp.arange(s) if not is_decode else None
+
+    def fwd(x, p, mem, shared, cache):
+        pos = jnp.int32(cell.seq_len - 1) if is_decode else None
+        posns = (jnp.full((1,), cell.seq_len - 1) if is_decode
+                 else jnp.arange(s))
+        if shared is not None:   # forward() casts shared params at entry
+            shared = M.cast_for_compute(shared)
+        y, aux, nc = M._run_stage(
+            cfg, unit, p, x, positions=posns, memory=mem, shared=shared,
+            cache=cache, pos=pos)
+        return y, aux, nc
+
+    if is_train:
+        def probe_fn(x, p, mem, shared):
+            def scalar(xp):
+                xx, pp = xp
+                y, aux, _ = fwd(xx, pp, mem, shared, None)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+            g = jax.grad(scalar)((x, p))
+            return g
+        args = (x_ab, p_ab, mem_ab, shared_ab)
+        shardings = (x_sh, p_sh,
+                     None if mem_ab is None else _x_sharding(mesh,
+                                                             mem_ab.shape),
+                     shared_sh)
+    else:
+        def probe_fn(x, p, mem, shared, cache):
+            return fwd(x, p, mem, shared, cache)
+        args = (x_ab, p_ab, mem_ab, shared_ab, cache_ab)
+        shardings = (x_sh, p_sh,
+                     None if mem_ab is None else _x_sharding(mesh,
+                                                             mem_ab.shape),
+                     shared_sh, cache_sh)
+
+    # drop None args (jit shardings for None leaves are fine as None trees)
+    fn = jax.jit(probe_fn, in_shardings=shardings)
+    compiled = fn.lower(*args).compile()
+    return _analyze(compiled)
+
+
+def loss_chunk_probe(cfg: ModelConfig, cell: shp.Cell, mesh) -> dict:
+    """fwd+bwd cost of one CE chunk (unembed matmul + logsumexp)."""
+    b = cell.global_batch
+    chunk = min(cfg.loss_seq_chunk, cell.seq_len)
+    d = cfg.d_model
+    emb_meta = {"unembed": L.ParamMeta((d, cfg.vocab), ("embed", "vocab"))}
+    p_ab = L.abstract(emb_meta)
+    p_sh = _param_shardings_for(emb_meta, mesh)
+    h_ab = jax.ShapeDtypeStruct((b, chunk, d), jnp.bfloat16)
+    y_ab = jax.ShapeDtypeStruct((b, chunk), jnp.int32)
+    h_sh = _x_sharding(mesh, h_ab.shape)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    y_sh = NamedSharding(mesh, sharding.fit_spec(P(bspec, None), y_ab.shape,
+                                                 mesh))
+
+    def chunk_fn(h, y, p):
+        def scalar(hp):
+            hh, pp = hp
+            logits = (hh @ pp["unembed"].astype(hh.dtype)).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+        return jax.grad(scalar)((h, p))
+
+    fn = jax.jit(chunk_fn, in_shardings=(h_sh, y_sh, p_sh))
+    compiled = fn.lower(h_ab, y_ab, p_ab).compile()
+    return _analyze(compiled)
+
+
+def encoder_probe(cfg: ModelConfig, cell: shp.Cell, mesh,
+                  train: bool) -> dict:
+    """One encoder layer (bidirectional attn + mlp) at encoder_seq."""
+    enc_cell = dataclasses.replace(
+        cell, seq_len=cfg.encoder_seq,
+        kind="train" if train else "prefill")
+    enc_cfg = dataclasses.replace(cfg, stages=((("attn",), 1),),
+                                  n_layers=1, sliding_window=None)
+    return stage_probe(enc_cfg, enc_cell, mesh, 0)
+
+
+def loss_embed_probe(cfg: ModelConfig, cell: shp.Cell, mesh) -> dict:
+    """fwd+bwd cost of embed lookup + final norm + vocab-chunked CE for one
+    microbatch (layers excluded) — the per-microbatch overhead outside the
+    stage scans when gradient accumulation is active."""
+    import dataclasses as dc
+    from repro.models.config import ModelConfig as MC
+    zero_cfg = dc.replace(cfg, encoder_layers=0, n_img_tokens=0)
+    meta = {
+        "embed": L.ParamMeta((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "unembed": L.ParamMeta((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+        "final_norm": L.norm_meta(cfg),
+    }
+    p_ab = L.abstract(meta)
+    p_sh = _param_shardings_for(meta, mesh)
+    b, s = cell.global_batch, cell.seq_len
+    tok_ab = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    tok_sh = NamedSharding(mesh, sharding.fit_spec(P(bspec, None),
+                                                   tok_ab.shape, mesh))
+
+    def fn(p, tokens):
+        def scalar(pp):
+            from repro.models import model as MM
+            x = pp["embed"].astype(jnp.bfloat16)[tokens]
+            x = MM.constrain_activation(zero_cfg, x)
+            fake = dict(pp)
+            batch_cfg = dc.replace(zero_cfg, tie_embeddings=False)
+            # reuse loss tail: norm + vocab-chunked CE
+            hidden = L.apply_norm(zero_cfg, pp["final_norm"], x)
+            params = {"unembed": pp["unembed"], "embed": pp["embed"]}
+            v = cfg.vocab
+            vc = min(v, max(16384, -(-v // 16)))
+            m_run = jnp.full((b, s), -jnp.inf, jnp.float32)
+            s_run = jnp.zeros((b, s), jnp.float32)
+            off = 0
+            while off < v:
+                size = min(vc, v - off)
+                wc = jax.lax.slice_in_dim(pp["unembed"], off, off + size,
+                                          axis=1)
+                logits = (hidden @ wc.astype(hidden.dtype)).astype(
+                    jnp.float32)
+                m_c = jnp.max(logits, axis=-1)
+                s_c = jnp.sum(jnp.exp(logits - m_c[..., None]), axis=-1)
+                m_new = jnp.maximum(m_run, m_c)
+                s_run = s_run * jnp.exp(m_run - m_new) + s_c * jnp.exp(
+                    m_c - m_new)
+                m_run = m_new
+                off += size
+            return jnp.mean(m_run + jnp.log(s_run))
+        return jax.grad(scalar)(p)
+
+    jfn = jax.jit(fn, in_shardings=(p_sh, tok_sh))
+    compiled = jfn.lower(p_ab, tok_ab).compile()
+    return _analyze(compiled)
+
+
+def corrected_costs(cfg: ModelConfig, cell: shp.Cell, mesh,
+                    main: dict, accum: int = 1) -> dict:
+    """main: {'flops','bytes_accessed','collective_bytes'} of the scanned
+    module.  Returns corrected totals + probe breakdown.
+
+    With gradient accumulation the microbatch body is itself inside a scan,
+    so stage bodies run (reps x accum) times while the main module counts
+    them once; the per-micro embed+loss overhead runs (accum) times."""
+    total = dict(main)
+    probes = {}
+    micro_cell = cell
+    if accum > 1:
+        micro_cell = dataclasses.replace(
+            cell, global_batch=cell.global_batch // accum)
+    for si, (unit, reps) in enumerate(cfg.stages):
+        mult = reps * accum - 1
+        if mult <= 0:
+            continue
+        p = stage_probe(cfg, micro_cell, mesh, si)
+        probes[f"stage{si}"] = p
+        total = _added(total, _scaled(p, mult))
+    if accum > 1 and cell.kind == "train":
+        p = loss_embed_probe(cfg, micro_cell, mesh)
+        probes["loss_embed"] = p
+        total = _added(total, _scaled(p, accum - 1))
+    if cfg.encoder_layers > 1 and cell.kind != "decode":
+        p = encoder_probe(cfg, micro_cell, mesh,
+                          train=cell.kind == "train")
+        probes["encoder"] = p
+        total = _added(total, _scaled(p, cfg.encoder_layers * accum - 1
+                                      if accum > 1 else
+                                      cfg.encoder_layers - 1))
+    return {"corrected": total, "probes": probes}

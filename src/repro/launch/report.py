@@ -1,0 +1,156 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+records.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro import configs
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+# XLA:CPU legalizes bf16 compute to f32 (converts visible in the HLO) and
+# schedules without TPU's async streaming; measured temp is therefore a
+# conservative upper bound.  The bf16 share of big buffers puts the TPU
+# estimate at roughly half the CPU figure; both are reported.
+CPU_LEGALIZATION_FACTOR = 0.5
+
+
+def load(dirname: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile_s | args GiB/dev | "
+        "temp GiB/dev (CPU / TPU-est) | HLO GFLOP/dev | coll GiB/dev | "
+        "collective mix |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - "
+                f"| - | - | - | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | - | "
+                f"- | - | - | - | {r.get('error', '')[:60]} |")
+            continue
+        mem = r.get("memory", {})
+        temp = mem.get("temp_size_in_bytes", 0)
+        args = mem.get("argument_size_in_bytes", 0)
+        coll = r.get("collective_bytes", 0)
+        mix = r.get("collectives", {}).get("count_by_kind", {})
+        mix_s = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                         for k, v in sorted(mix.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {fmt_bytes(args)} | "
+            f"{fmt_bytes(temp)} / {fmt_bytes(temp * CPU_LEGALIZATION_FACTOR)}"
+            f" | {r['flops'] / 1e9:.0f} | {fmt_bytes(coll)} | {mix_s} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | HLO_FLOPs(total) | useful ratio | "
+        "compute/bound (\"roofline fraction\") | what moves the bottleneck |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        frac = t["compute_s"] / max(t["bound_s"], 1e-30)
+        note = bottleneck_note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant'].replace('_s', '')} | "
+            f"{t['model_flops']:.2e} | {t['hlo_flops_total']:.2e} | "
+            f"{t['useful_flops_ratio']:.2f} | {frac:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def bottleneck_note(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    kind = r["kind"]
+    if dom == "memory_s":
+        if kind == "decode":
+            return ("KV cache streaming dominates: quantize cache to int8 "
+                    "or shrink via SWA/MLA")
+        return ("activation traffic: fuse attention into the Pallas flash "
+                "kernel (removes score-tensor round trips)")
+    if dom == "collective_s":
+        return ("grad/TP collectives: hierarchical ring-mesh reduce + int8 "
+                "pod hop (dist.collectives)")
+    return "compute-bound: at roofline, only kernel-level wins remain"
+
+
+def summary(recs: list[dict]) -> str:
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = len(recs) - n_ok - n_skip
+    worst = [(r["roofline"]["compute_s"] / max(r["roofline"]["bound_s"],
+                                               1e-30), r)
+             for r in recs if r["status"] == "ok"
+             and r.get("mesh") == "single"]
+    worst.sort(key=lambda x: x[0])
+    lines = [f"{n_ok} ok / {n_skip} skipped / {n_err} errors "
+             f"over {len(recs)} records", ""]
+    if worst:
+        lines.append("Worst roofline fractions (hillclimb candidates):")
+        for frac, r in worst[:5]:
+            lines.append(f"  - {r['arch']}/{r['shape']}: {frac:.3f} "
+                         f"(dominant {r['roofline']['dominant']})")
+        coll = [(r["roofline"]["collective_s"] /
+                 max(r["roofline"]["bound_s"], 1e-30), r)
+                for _, r in worst]
+        coll.sort(key=lambda x: -x[0])
+        lines.append("Most collective-bound:")
+        for frac, r in coll[:3]:
+            lines.append(f"  - {r['arch']}/{r['shape']}: collective share "
+                         f"{frac:.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+    recs = load(args.dir)
+    txt = []
+    txt.append("## Dry-run records\n")
+    txt.append(dryrun_table(recs))
+    txt.append("\n## Roofline (single-pod 16x16)\n")
+    txt.append(roofline_table(recs, "single"))
+    txt.append("\n## Summary\n")
+    txt.append(summary(recs))
+    out = "\n".join(txt)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out)
+    else:
+        print(out)
+
+
+if __name__ == "__main__":
+    main()

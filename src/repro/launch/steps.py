@@ -1,0 +1,188 @@
+"""Step functions + sharding assembly for train / prefill / decode cells.
+
+``make_case(cfg, cell, mesh)`` returns a jitted function plus abstract
+arguments, ready for ``.lower(*args).compile()`` — the dry-run contract.
+The same functions power the real CPU trainers in examples/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import context, sharding
+from repro.launch import shapes as shp
+from repro.models import config as mcfg
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: mcfg.ModelConfig, ocfg: AdamWConfig,
+                    accum_steps: int = 1):
+    """Train step with gradient accumulation: the global batch is split
+    into ``accum_steps`` microbatches scanned with a float32 grad
+    accumulator — activation memory scales with the microbatch while the
+    optimizer still sees the full global batch."""
+    grad_fn = jax.value_and_grad(
+        functools.partial(M.loss_fn, cfg), has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape((accum_steps, t.shape[0] // accum_steps)
+                                    + t.shape[1:]), batch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (l, _m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+        params, opt_state, om = adamw_update(ocfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def accum_for(cfg: mcfg.ModelConfig, cell) -> int:
+    """Gradient-accumulation factor per cell: big models microbatch so the
+    activation working set fits HBM; microbatch stays divisible by the
+    data-axis extent of both production meshes (32)."""
+    if cell.kind != "train":
+        return 1
+    n = cfg.param_count()
+    if n > 6e10:
+        return 8
+    if n > 2e10:
+        return 4
+    if n > 8e9:
+        return 2
+    return 1
+
+
+def make_prefill_step(cfg: mcfg.ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        logits, caches, _mem = M.prefill(
+            cfg, params, batch["tokens"], max_seq=max_seq,
+            frames=batch.get("frames"), img_embeds=batch.get("img_embeds"))
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: mcfg.ModelConfig):
+    def serve_step(params, caches, token, pos):
+        return M.decode_step(cfg, params, caches, token, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# case assembly (abstract args + shardings)
+# ---------------------------------------------------------------------------
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _batch_shardings(mesh, batch_abstract):
+    bspec = sharding.batch_spec(mesh)
+
+    def one(leaf):
+        parts = [bspec[0] if len(bspec) else None]
+        parts += [None] * (len(leaf.shape) - 1)
+        return _ns(mesh, sharding.fit_spec(P(*parts), leaf.shape, mesh))
+
+    return jax.tree.map(one, batch_abstract)
+
+
+def _serve_params(cfg):
+    """Serving uses bf16 weights."""
+    ab = M.abstract_params(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype), ab)
+
+
+@dataclasses.dataclass
+class Case:
+    name: str
+    fn: Any               # jitted
+    args: tuple           # abstract ShapeDtypeStructs
+    cfg: mcfg.ModelConfig
+    cell: shp.Cell
+    accum: int = 1
+
+
+def make_case(cfg: mcfg.ModelConfig, cell: shp.Cell, mesh,
+              *, rules=None, hier_hint: bool = False,
+              attn_override: Optional[str] = None) -> Case:
+    """Build the jitted step + abstract args for one dry-run cell."""
+    cfg = dataclasses.replace(
+        cfg, max_seq=max(cfg.max_seq, cell.seq_len),
+        attn_impl=attn_override or
+        ("seq_shard" if cell.shape == shp.LONG_500K else "xla"))
+
+    pspecs = sharding.param_shardings(cfg, mesh, rules)
+    batch_ab = shp.batch_specs(cfg, cell)
+    batch_sh = _batch_shardings(mesh, batch_ab)
+
+    if cell.kind == "train":
+        params_ab = M.abstract_params(cfg)
+        ocfg = AdamWConfig()
+        opt_ab = jax.eval_shape(adamw_init, params_ab)
+        opt_sh = {"m": pspecs, "v": pspecs,
+                  "step": _ns(mesh, P())}
+        accum = accum_for(cfg, cell)
+        fn = jax.jit(
+            make_train_step(cfg, ocfg, accum_steps=accum),
+            in_shardings=(pspecs, opt_sh, batch_sh),
+            out_shardings=(pspecs, opt_sh, _ns(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        case = Case(cell.name, fn, (params_ab, opt_ab, batch_ab), cfg, cell)
+        case.accum = accum
+        return case
+
+    params_ab = _serve_params(cfg)
+    seq_shard = cell.shape == shp.LONG_500K
+    cache_specs = sharding.cache_specs(cfg, mesh, cell.global_batch,
+                                       cell.seq_len, seq_shard=seq_shard)
+    cache_sh = jax.tree.map(lambda s: _ns(mesh, s), cache_specs)
+
+    if cell.kind == "prefill":
+        fn = jax.jit(
+            make_prefill_step(cfg, max_seq=cell.seq_len),
+            in_shardings=(pspecs, batch_sh),
+            out_shardings=(_ns(mesh, P()), cache_sh),
+        )
+        return Case(cell.name, fn, (params_ab, batch_ab), cfg, cell)
+
+    # decode
+    caches_ab = M.init_cache(cfg, cell.global_batch, cell.seq_len,
+                             abstract=True)
+    tok_ab = batch_ab["tokens"]
+    tok_sh = _batch_shardings(mesh, tok_ab)
+    pos_ab = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = jax.jit(
+        make_decode_step(cfg),
+        in_shardings=(pspecs, cache_sh, tok_sh, _ns(mesh, P())),
+        out_shardings=(_ns(mesh, P()), cache_sh),
+        donate_argnums=(1,),
+    )
+    return Case(cell.name, fn, (params_ab, caches_ab, tok_ab, pos_ab),
+                cfg, cell)

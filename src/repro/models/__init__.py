@@ -1,0 +1,13 @@
+"""Model zoo: layer-pattern architectures (dense GQA / MoE / enc-dec /
+VLM cross-attn / Mamba-2 / Zamba-2 hybrid) built on the Pallas kernel ops."""
+from repro.models.config import (KINDS, ModelConfig, MoEConfig, SSMConfig,
+                                 smoke_config)
+from repro.models.model import (abstract_params, decode_step, forward,
+                                init_cache, init_params, loss_fn, model_meta,
+                                prefill, unembed)
+
+__all__ = [
+    "KINDS", "ModelConfig", "MoEConfig", "SSMConfig", "smoke_config",
+    "abstract_params", "decode_step", "forward", "init_cache", "init_params",
+    "loss_fn", "model_meta", "prefill", "unembed",
+]

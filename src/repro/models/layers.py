@@ -1,0 +1,488 @@
+"""Layer implementations + parameter metadata for the model zoo.
+
+Parameters are described by ``ParamMeta`` (shape, logical axes, init) so the
+same builder yields: real parameters (``materialize``), abstract
+ShapeDtypeStructs for the multi-pod dry-run (``abstract``), and
+PartitionSpecs (``repro.dist.sharding`` maps logical axes -> mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Parameter metadata
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]   # logical axis names (sharding rules)
+    dtype: Any = jnp.float32
+    init: str = "normal"              # normal|zeros|ones|a_log|dt_bias
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_map_meta(f, tree):
+    return jax.tree.map(f, tree, is_leaf=is_meta)
+
+
+def _init_one(meta: ParamMeta, key) -> jax.Array:
+    if meta.init == "normal":
+        return (jax.random.normal(key, meta.shape, jnp.float32)
+                * meta.scale).astype(meta.dtype)
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, meta.dtype)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, meta.dtype)
+    if meta.init == "a_log":  # A = -exp(a_log); a_log ~ log U[1, 16]
+        u = jax.random.uniform(key, meta.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(meta.dtype)
+    if meta.init == "dt_bias":  # softplus^-1 of U[dt_min, dt_max]
+        u = jax.random.uniform(key, meta.shape, jnp.float32, 1e-3, 0.1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(meta.dtype)
+    raise ValueError(meta.init)
+
+
+def materialize(metas, key) -> Any:
+    """Instantiate real parameters from a ParamMeta pytree."""
+    leaves, treedef = jax.tree.flatten(metas, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(m, k) for m, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(metas) -> Any:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    return tree_map_meta(
+        lambda m: jax.ShapeDtypeStruct(m.shape, m.dtype), metas)
+
+
+def stack_metas(metas, repeats: int) -> Any:
+    """Add a leading scan ("layers") axis to every meta in the tree."""
+    return tree_map_meta(
+        lambda m: ParamMeta((repeats,) + m.shape, ("layers",) + m.axes,
+                            m.dtype, m.init, m.scale), metas)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+def norm_meta(cfg: ModelConfig) -> dict:
+    d = {"scale": ParamMeta((cfg.d_model,), (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamMeta((cfg.d_model,), (None,), init="zeros")
+    return d
+
+
+def constrain_btd(cfg, x):
+    """Shard a (B, S, d) activation per cfg.act_shard when a mesh is
+    ambient (no-op otherwise).  Applied around reductions over d (norms) so
+    GSPMD keeps the chosen layout instead of all-gathering a full f32
+    tensor per device."""
+    from repro.dist import context
+    mesh = context.current_mesh()
+    if mesh is None or x.ndim != 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import sharding as shd
+    baxes = context.data_axes(mesh)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    model = "model" if "model" in mesh.axis_names else None
+    if cfg.act_shard == "model_seq":
+        spec = P(b, model, None)
+    elif cfg.act_shard == "model_d":
+        spec = P(b, None, model)
+    else:
+        spec = P(b, None, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, shd.fit_spec(spec, x.shape, mesh)))
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = constrain_btd(cfg, x.astype(jnp.float32))
+    if cfg.norm == "rmsnorm":
+        inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        out = xf * inv * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6) \
+            * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return constrain_btd(cfg, out).astype(x.dtype)
+
+
+def rope(q, k, positions, theta: float):
+    """Rotary embeddings. q/k: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = q.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+        ang = ang[None, None]                       # (1,1,S,D/2)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        ang = ang[:, None]                          # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rot(x):
+        x1, x2 = x[..., ::2], x[..., 1::2]
+        xr1 = x1 * cos - x2 * sin
+        xr2 = x2 * cos + x1 * sin
+        return jnp.stack([xr1, xr2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (self / cross) + MLP
+# ---------------------------------------------------------------------------
+def attn_meta(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": ParamMeta((d, hq, hd), ("embed", "heads", None)),
+        "wk": ParamMeta((d, hkv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamMeta((d, hkv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamMeta((hq, hd, d), ("heads", None, "embed")),
+        "ln": norm_meta(cfg),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = ParamMeta((hq, hd), ("heads", None), init="zeros")
+        p["bk"] = ParamMeta((hkv, hd), ("kv_heads", None), init="zeros")
+        p["bv"] = ParamMeta((hkv, hd), ("kv_heads", None), init="zeros")
+    return p
+
+
+def mlp_meta(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wg": ParamMeta((d, ff), ("embed", "ff")),
+            "wu": ParamMeta((d, ff), ("embed", "ff")),
+            "wd": ParamMeta((ff, d), ("ff", "embed")),
+            "ln": norm_meta(cfg),
+        }
+    return {
+        "w1": ParamMeta((d, ff), ("embed", "ff")),
+        "b1": ParamMeta((ff,), ("ff",), init="zeros"),
+        "w2": ParamMeta((ff, d), ("ff", "embed")),
+        "b2": ParamMeta((d,), (None,), init="zeros"),
+        "ln": norm_meta(cfg),
+    }
+
+
+def constrain_inner(x, dim: int):
+    """Shard an inner activation's ``dim`` (heads / ff / d_inner) over
+    "model" when divisible — the Megatron pattern: the residual stream is
+    sequence-sharded between blocks, inner tensors are tensor-sharded, and
+    GSPMD inserts the all-gather / reduce-scatter pair at the boundary."""
+    from repro.dist import context
+    mesh = context.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import sharding as shd
+    baxes = context.data_axes(mesh)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    parts = [b] + [None] * (x.ndim - 1)
+    parts[dim] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, shd.fit_spec(P(*parts), x.shape, mesh)))
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    y = apply_norm(cfg, p["ln"], x)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(y @ p["wg"]) * (y @ p["wu"])
+        h = constrain_inner(h, 2)
+        return x + h @ p["wd"]
+    h = jax.nn.gelu(y @ p["w1"] + p["b1"])
+    h = constrain_inner(h, 2)
+    return x + (h @ p["w2"] + p["b2"])
+
+
+def _project_q(p, y):
+    q = jnp.einsum("btd,dhk->bhtk", y, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+    return constrain_inner(q, 1)
+
+
+def _project_kv(p, src):
+    k = jnp.einsum("btd,dhk->bhtk", src, p["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", src, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    return constrain_inner(k, 1), constrain_inner(v, 1)
+
+
+def attention_call(cfg: ModelConfig, q, k, v, *, causal, window,
+                   q_offset=None):
+    """Dispatch to the configured attention implementation."""
+    if cfg.attn_impl == "seq_shard" and q.shape[2] == 1:
+        from repro.dist import decode_attn
+        return decode_attn.seq_sharded_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset)
+    if q_offset is not None or cfg.attn_impl in ("xla", "seq_shard"):
+        from repro.kernels import ref as kref
+        if q.shape[2] > 1024:
+            # flash-in-XLA: O(S) memory, required for 32k+ sequences
+            return kref.attention_chunked(
+                q, k, v, causal=causal, window=window, q_offset=q_offset)
+        return kref.attention_ref(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    return kops.attention(q, k, v, causal=causal, window=window,
+                          impl=cfg.attn_impl)
+
+
+def attn_block(cfg: ModelConfig, p, x, *, causal=True, window=None,
+               positions=None, cross=False, memory=None, cache=None,
+               pos=None):
+    """Self- or cross-attention block (pre-norm, residual).
+
+    Self-attention: cache dict(k=(B,Hkv,Smax,hd), v=...) updated at ``pos``.
+    Cross-attention: with ``memory`` the K/V are computed (and stored to the
+    cache when one is given — prefill); without ``memory`` the cached K/V
+    are used (decode).  Returns (x, new_cache_or_None).
+    """
+    b, s, d = x.shape
+    y = apply_norm(cfg, p["ln"], x)
+    q = _project_q(p, y)
+    new_cache = None
+    q_offset = None
+    if cross:
+        if memory is not None:
+            k, v = _project_kv(p, memory.astype(y.dtype))
+            if cache is not None:
+                new_cache = {"k": k.astype(cache["k"].dtype),
+                             "v": v.astype(cache["v"].dtype)}
+        else:
+            assert cache is not None, "cross decode needs a prefilled cache"
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        causal = False
+    else:
+        k, v = _project_kv(p, y)
+        if positions is None:
+            positions = jnp.arange(s)
+        q, k = rope(q, k, positions, cfg.rope_theta)
+        if cache is not None:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            q_offset = pos
+    out = attention_call(cfg, q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)
+    x = x + jnp.einsum("bhtk,hkd->btd", out.astype(x.dtype), p["wo"])
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-free capacity-bounded scatter dispatch, EP-ready)
+# ---------------------------------------------------------------------------
+def moe_meta(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    e = cfg.moe
+    p = {
+        "router": ParamMeta((d, e.n_experts), ("embed", "experts")),
+        "wg": ParamMeta((e.n_experts, d, e.d_ff_expert),
+                        ("experts", "embed", "expert_ff")),
+        "wu": ParamMeta((e.n_experts, d, e.d_ff_expert),
+                        ("experts", "embed", "expert_ff")),
+        "wd": ParamMeta((e.n_experts, e.d_ff_expert, d),
+                        ("experts", "expert_ff", "embed")),
+        "ln": norm_meta(cfg),
+    }
+    if e.shared_expert:
+        p["shared"] = {k: v for k, v in
+                       mlp_meta(cfg, d_ff=e.d_ff_expert).items()
+                       if k != "ln"}
+    return p
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """Token-choice top-k MoE with capacity-bounded scatter dispatch.
+
+    Dispatch is linear in tokens (no (T x E x C) one-hot einsum): tokens are
+    scattered into an (E, C, d) buffer via positions from a per-expert
+    running count, processed by a grouped einsum (expert dim shards over the
+    `model` mesh axis = expert parallelism), and combined by gather.
+    Overflowing tokens (beyond capacity) fall through via the residual.
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    y = apply_norm(cfg, p["ln"], x)
+    t = b * s
+    yt = y.reshape(t, d)
+
+    logits = (yt @ p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    weights, experts = jax.lax.top_k(gates, e.top_k)            # (T, k)
+    weights = weights / jnp.maximum(
+        weights.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(t * e.top_k * e.capacity_factor / e.n_experts))
+    cap = max(cap, 4)
+    flat_e = experts.reshape(-1)                                # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e.n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1          # (T*k, E)
+    slot = jnp.max(pos_in_e, axis=-1)                           # (T*k,)
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap - 1)
+
+    tok_idx = jnp.repeat(jnp.arange(t), e.top_k)
+    buf = jnp.zeros((e.n_experts, cap, d), y.dtype)
+    buf = buf.at[flat_e, slot_c].add(
+        jnp.where(keep[:, None], yt[tok_idx], 0))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"])            # (E, C, d)
+
+    gathered = out_buf[flat_e, slot_c]                          # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    wflat = weights.reshape(-1)
+    combined = jax.ops.segment_sum(
+        gathered * wflat[:, None].astype(gathered.dtype), tok_idx,
+        num_segments=t)
+
+    out = x + combined.reshape(b, s, d).astype(x.dtype)
+    if e.shared_expert:
+        sp = p["shared"]
+        hs = jax.nn.silu(y @ sp["wg"]) * (y @ sp["wu"])
+        out = out + (hs @ sp["wd"]).astype(x.dtype)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(experts[:, 0], e.n_experts,
+                                 dtype=jnp.float32), axis=0)
+    ce = jnp.mean(gates, axis=0)
+    aux = e.n_experts * jnp.sum(me * ce)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD block
+# ---------------------------------------------------------------------------
+def mamba_meta(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = cfg.d_inner
+    h = cfg.n_ssm_heads
+    gn = s.n_groups * s.d_state
+    return {
+        "wz": ParamMeta((d, di), ("embed", "inner")),
+        "wx": ParamMeta((d, di), ("embed", "inner")),
+        "wb": ParamMeta((d, gn), ("embed", None)),
+        "wc": ParamMeta((d, gn), ("embed", None)),
+        "wdt": ParamMeta((d, h), ("embed", None)),
+        "conv_x": ParamMeta((di, s.conv_width), ("inner", None),
+                            scale=0.2),
+        "conv_b": ParamMeta((gn, s.conv_width), (None, None), scale=0.2),
+        "conv_c": ParamMeta((gn, s.conv_width), (None, None), scale=0.2),
+        "a_log": ParamMeta((h,), (None,), init="a_log"),
+        "dt_bias": ParamMeta((h,), (None,), init="dt_bias"),
+        "d_skip": ParamMeta((h,), (None,), init="ones"),
+        "gate_norm": ParamMeta((di,), ("inner",), init="ones"),
+        "wo": ParamMeta((di, d), ("inner", "embed")),
+        "ln": norm_meta(cfg),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, C), w: (C, W).
+    state: (B, W-1, C) previous inputs for decode. Returns (y, new_state)."""
+    b, s, c = x.shape
+    cw = w.shape[-1]
+    pad = state if state is not None else jnp.zeros((b, cw - 1, c), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+W-1, C)
+    idx = jnp.arange(s)[:, None] + jnp.arange(cw)[None, :]
+    windows = xp[:, idx, :]                             # (B, S, W, C)
+    y = jnp.einsum("bswc,cw->bsc", windows, w)
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else pad
+    return y, new_state
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, cache=None):
+    """Mamba-2 block. cache: dict(conv_x/conv_b/conv_c states, ssm state).
+    Returns (x, new_cache_or_None)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    h, pdim, n = cfg.n_ssm_heads, s_cfg.head_dim, s_cfg.d_state
+    g = s_cfg.n_groups
+    y = apply_norm(cfg, p["ln"], x)
+    z = y @ p["wz"]
+    xs = y @ p["wx"]
+    bs = y @ p["wb"]
+    cs = y @ p["wc"]
+    dt = jax.nn.softplus((y @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,S,H)
+    new_cache = None
+    if cache is None:
+        xs, _ = _causal_conv(xs, p["conv_x"])
+        bs, _ = _causal_conv(bs, p["conv_b"])
+        cs, _ = _causal_conv(cs, p["conv_c"])
+    else:
+        xs, cx = _causal_conv(xs, p["conv_x"], cache["conv_x"])
+        bs, cb = _causal_conv(bs, p["conv_b"], cache["conv_b"])
+        cs, cc = _causal_conv(cs, p["conv_c"], cache["conv_c"])
+    xs, bs, cs = jax.nn.silu(xs), jax.nn.silu(bs), jax.nn.silu(cs)
+
+    xh = xs.reshape(b, s, h, pdim).transpose(0, 2, 1, 3)        # (B,H,S,P)
+    bh = bs.reshape(b, s, g, n).transpose(0, 2, 1, 3)           # (B,G,S,N)
+    ch = cs.reshape(b, s, g, n).transpose(0, 2, 1, 3)
+    dth = dt.transpose(0, 2, 1)                                 # (B,H,S)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
+
+    if cache is None:
+        ssd_impl = "xla" if cfg.attn_impl in ("xla", "seq_shard") \
+            else cfg.attn_impl
+        yh = kops.ssd(xh, dth, a, bh, ch, chunk=s_cfg.chunk, impl=ssd_impl)
+    else:
+        # single-step (or short-step) recurrence against the cached state
+        state = cache["ssm"]                                    # (B,H,N,P)
+        rep = h // g
+        bhh = jnp.repeat(bh, rep, axis=1).astype(jnp.float32)
+        chh = jnp.repeat(ch, rep, axis=1).astype(jnp.float32)
+
+        def step(st, inp):
+            da_t, dbx_t, c_t = inp
+            st = da_t[..., None, None] * st + dbx_t
+            return st, jnp.einsum("bhnp,bhn->bhp", st, c_t)
+
+        da = jnp.exp(dth * a[None, :, None])
+        dbx = jnp.einsum("bhs,bhsn,bhsp->sbhnp", dth, bhh,
+                         xh.astype(jnp.float32))
+        state, ys = jax.lax.scan(
+            step, state, (jnp.moveaxis(da, 2, 0), dbx,
+                          jnp.moveaxis(chh, 2, 0)))
+        yh = jnp.moveaxis(ys, 0, 2)                             # (B,H,S,P)
+        new_cache = {"conv_x": cx, "conv_b": cb, "conv_c": cc, "ssm": state}
+
+    yh = yh.astype(jnp.float32) + p["d_skip"].astype(
+        jnp.float32)[None, :, None, None] * xh.astype(jnp.float32)
+    yflat = yh.transpose(0, 2, 1, 3).reshape(b, s, h * pdim)
+    # gated RMSNorm (Mamba-2)
+    inv = jax.lax.rsqrt(jnp.mean(yflat * yflat, -1, keepdims=True) + 1e-6)
+    yflat = yflat * inv * p["gate_norm"].astype(jnp.float32)
+    yflat = yflat * jax.nn.silu(z.astype(jnp.float32))
+    x = x + (yflat @ p["wo"].astype(jnp.float32)).astype(x.dtype)
+    return x, new_cache

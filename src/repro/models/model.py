@@ -1,0 +1,389 @@
+"""Top-level model: parameter metas, forward, loss, prefill, decode.
+
+The stack is organized in *stages* (repeated units of layer kinds, see
+``config.py``); each stage is a ``lax.scan`` over its repeats with optional
+rematerialization — one trace per unit keeps the HLO small enough that the
+104B configs lower and compile for 512 devices in seconds.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Any
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def constrain_activation(cfg: ModelConfig, x):
+    """Shard the residual stream (B, S, d) per cfg.act_shard:
+
+    model_seq — (batch=(pod,data), seq=model, d=None): Megatron-style
+        sequence parallelism; norms/MLPs stay local, attention mixes
+        positions via dist.seq_attn (all-gathered K/V).  Keeps remat-saved
+        scan carries fully sharded AND avoids full-d activation gathers.
+    model_d   — (batch, None, d=model): the naive tensor-sharded residual
+        (recorded baseline; see EXPERIMENTS.md §Perf iteration 1).
+    none      — batch sharding only.
+    """
+    from repro.dist import context
+    mesh = context.current_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import sharding as shd
+    baxes = context.data_axes(mesh)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    model = "model" if "model" in mesh.axis_names else None
+    if cfg.act_shard == "model_seq":
+        spec = P(b, model, None)
+    elif cfg.act_shard == "model_d":
+        spec = P(b, None, model)
+    else:
+        spec = P(b, None, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, shd.fit_spec(spec, x.shape, mesh)))
+
+
+def cast_for_compute(tree):
+    """Mixed precision: f32 master params are cast to bf16 at use; small
+    numerically-sensitive leaves (norms, ssm decays) are cast back to f32
+    inside their layers."""
+    return jax.tree.map(
+        lambda w: w.astype(COMPUTE_DTYPE)
+        if w.dtype == jnp.float32 else w, tree)
+
+
+# ---------------------------------------------------------------------------
+# Parameter metadata for the whole model
+# ---------------------------------------------------------------------------
+def _block_meta(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "attn":
+        return {"attn": L.attn_meta(cfg), "mlp": L.mlp_meta(cfg)}
+    if kind == "moe":
+        return {"attn": L.attn_meta(cfg), "moe": L.moe_meta(cfg)}
+    if kind == "cross":
+        return {"attn": L.attn_meta(cfg), "xattn": L.attn_meta(cfg, cross=True),
+                "mlp": L.mlp_meta(cfg)}
+    if kind == "mamba":
+        return {"mamba": L.mamba_meta(cfg)}
+    if kind == "hybrid":
+        return {"mamba": L.mamba_meta(cfg)}   # shared attn lives at top level
+    raise ValueError(kind)
+
+
+def _has_hybrid(cfg: ModelConfig) -> bool:
+    return any("hybrid" in unit for unit, _ in cfg.stages)
+
+
+def model_meta(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    meta: dict = {
+        "embed": L.ParamMeta((cfg.vocab, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": L.norm_meta(cfg),
+        "stages": [],
+    }
+    if not cfg.tie_embeddings:
+        meta["unembed"] = L.ParamMeta((d, cfg.vocab), ("embed", "vocab"))
+    for unit, reps in cfg.stages:
+        unit_meta = {str(i): _block_meta(cfg, k) for i, k in enumerate(unit)}
+        meta["stages"].append(L.stack_metas(unit_meta, reps))
+    if _has_hybrid(cfg):
+        meta["shared_attn"] = {"attn": L.attn_meta(cfg),
+                               "mlp": L.mlp_meta(cfg)}
+    if cfg.encoder_layers:
+        enc_unit = {"0": {"attn": L.attn_meta(cfg), "mlp": L.mlp_meta(cfg)}}
+        meta["encoder"] = {
+            "pos": L.ParamMeta((cfg.encoder_seq, d), (None, "embed")),
+            "stages": [L.stack_metas(enc_unit, cfg.encoder_layers)],
+            "final_norm": L.norm_meta(cfg),
+        }
+    return meta
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    return L.materialize(model_meta(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return L.abstract(model_meta(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _block_forward(cfg: ModelConfig, kind: str, p, x, *, positions,
+                   memory=None, shared=None, cache=None, pos=None):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict = {}
+    if kind in ("attn", "moe", "cross"):
+        c_self = cache.get("self") if cache else None
+        x, nc = L.attn_block(cfg, p["attn"], x, causal=True,
+                             window=cfg.sliding_window, positions=positions,
+                             cache=c_self, pos=pos)
+        if nc is not None:
+            new_cache["self"] = nc
+        if kind == "cross":
+            c_x = cache.get("cross") if cache else None
+            x, ncx = L.attn_block(cfg, p["xattn"], x, cross=True,
+                                  memory=memory, cache=c_x, pos=pos)
+            if ncx is not None:
+                new_cache["cross"] = ncx
+        if kind == "moe":
+            x, aux = L.moe_block(cfg, p["moe"], x)
+        else:
+            x = L.apply_mlp(cfg, p["mlp"], x)
+    elif kind in ("mamba", "hybrid"):
+        c_m = cache.get("mamba") if cache else None
+        x, nc = L.mamba_block(cfg, p["mamba"], x, cache=c_m)
+        if nc is not None:
+            new_cache["mamba"] = nc
+        if kind == "hybrid":
+            c_s = cache.get("shared") if cache else None
+            x, ncs = L.attn_block(cfg, shared["attn"], x, causal=True,
+                                  positions=positions, cache=c_s, pos=pos)
+            x = L.apply_mlp(cfg, shared["mlp"], x)
+            if ncs is not None:
+                new_cache["shared"] = ncs
+    else:
+        raise ValueError(kind)
+    return x, aux, (new_cache if cache is not None else None)
+
+
+def _run_stage(cfg: ModelConfig, unit: tuple[str, ...], stage_params, x, *,
+               positions, memory=None, shared=None, cache=None, pos=None):
+    """Scan one stage over its repeats. cache (if any) carries a leading
+    repeats axis; ys are the updated caches."""
+
+    def unit_fn(carry, scanned):
+        x, aux = carry
+        x = constrain_activation(cfg, x)
+        p_unit, c_unit = scanned
+        p_unit = cast_for_compute(p_unit)
+        new_c = {}
+        for i, kind in enumerate(unit):
+            ci = c_unit[str(i)] if c_unit is not None else None
+            x, a, nc = _block_forward(cfg, kind, p_unit[str(i)], x,
+                                      positions=positions, memory=memory,
+                                      shared=shared, cache=ci, pos=pos)
+            aux = aux + a
+            if nc is not None:
+                new_c[str(i)] = nc
+        return (x, aux), (new_c if cache is not None else None)
+
+    if cfg.fsdp_gather_dtype == "bf16" and cache is None:
+        # cast master params to bf16 BEFORE the scan: the per-layer FSDP
+        # all-gather then moves half the bytes (§Perf iteration)
+        stage_params = cast_for_compute(stage_params)
+
+    fn = jax.checkpoint(unit_fn) if cfg.remat and cache is None else unit_fn
+    (x, aux), new_cache = jax.lax.scan(
+        fn, (x, jnp.float32(0.0)), (stage_params, cache))
+    return x, aux, new_cache
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, S_enc, d)."""
+    enc = params["encoder"]
+    x = frames + enc["pos"][None, :frames.shape[1], :].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def unit_fn(carry, p_unit):
+        x, _ = carry
+        p = cast_for_compute(p_unit)["0"]
+        x, _nc = L.attn_block(cfg, p["attn"], x, causal=False,
+                              positions=positions)
+        x = L.apply_mlp(cfg, p["mlp"], x)
+        return (x, jnp.float32(0.0)), None
+
+    fn = jax.checkpoint(unit_fn) if cfg.remat else unit_fn
+    (x, _), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)),
+                             enc["stages"][0])
+    return L.apply_norm(cfg, enc["final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, memory=None,
+            frames=None, img_embeds=None, positions=None,
+            caches=None, pos=None):
+    """Token ids -> hidden states (pre-unembed).
+
+    memory/frames/img_embeds: cross-attention sources (enc-dec / VLM).
+    caches/pos: decode mode (caches mirrors stages structure).
+    Returns (hidden (B,S,d), aux_loss, new_caches, memory)."""
+    if frames is not None:
+        memory = _encode(cfg, params, frames)
+    if img_embeds is not None:
+        memory = img_embeds
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    x = constrain_activation(cfg, x)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[-1])
+    shared = params.get("shared_attn")
+    if shared is not None:
+        shared = cast_for_compute(shared)
+    aux_total = jnp.float32(0.0)
+    new_caches = [] if caches is not None else None
+    for si, (unit, reps) in enumerate(cfg.stages):
+        c = caches[si] if caches is not None else None
+        x, aux, nc = _run_stage(cfg, unit, params["stages"][si], x,
+                                positions=positions, memory=memory,
+                                shared=shared, cache=c, pos=pos)
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches.append(nc)
+    x = constrain_activation(cfg, x)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux_total, new_caches, memory
+
+
+def unembed(cfg: ModelConfig, params: Params, hidden):
+    if cfg.tie_embeddings:
+        logits = hidden @ params["embed"].astype(hidden.dtype).T
+    else:
+        logits = hidden @ params["unembed"].astype(hidden.dtype)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss (sequence-chunked cross entropy: never materializes (B,S,V) at once)
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> tuple[jax.Array, dict]:
+    """Cross entropy over a *vocab-chunked* unembedding: the (B, S, Vc)
+    logits of each chunk are transient (static python loop, so XLA's cost
+    analysis counts every chunk and sharded slices stay static), combined
+    with a running logsumexp.  Never materializes (B, S, V)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    hidden, aux, _, _ = forward(
+        cfg, params, tokens,
+        frames=batch.get("frames"), img_embeds=batch.get("img_embeds"))
+    b, s, d = hidden.shape
+    v = cfg.vocab
+    vc = min(v, max(16384, -(-v // 16)))
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+    @functools.partial(jax.checkpoint, static_argnums=(3,))
+    def chunk_stats(hidden, wc, labels, off):
+        """Per-chunk (max, expsum@max, gold) — logits recomputed in bwd."""
+        logits = (hidden @ wc.astype(hidden.dtype)).astype(jnp.float32)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        size = logits.shape[-1]
+        m_c = jnp.max(logits, axis=-1)
+        s_c = jnp.sum(jnp.exp(logits - m_c[..., None]), axis=-1)
+        in_range = (labels >= off) & (labels < off + size)
+        idx = jnp.clip(labels - off, 0, size - 1)
+        gold_c = jnp.where(
+            in_range,
+            jnp.take_along_axis(logits, idx[..., None], axis=-1)[..., 0],
+            0.0)
+        return m_c, s_c, gold_c
+
+    m_run = jnp.full((b, s), -jnp.inf, jnp.float32)
+    s_run = jnp.zeros((b, s), jnp.float32)
+    gold = jnp.zeros((b, s), jnp.float32)
+    off = 0
+    while off < v:
+        size = min(vc, v - off)
+        wc = jax.lax.slice_in_dim(w, off, off + size, axis=1)
+        m_c, s_c, gold_c = chunk_stats(hidden, wc, labels, off)
+        m_new = jnp.maximum(m_run, m_c)
+        s_run = s_run * jnp.exp(m_run - m_new) \
+            + s_c * jnp.exp(m_c - m_new)
+        m_run = m_new
+        gold = gold + gold_c
+        off += size
+
+    logz = m_run + jnp.log(s_run)
+    ce = jnp.mean(logz - gold)
+    moe_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    loss = ce + moe_w * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def stage_cache(cfg: ModelConfig, unit, reps: int, batch: int, max_seq: int,
+                dtype=jnp.bfloat16, abstract: bool = False):
+    """Cache subtree for one stage (leading dim = reps)."""
+    def arr(shape, dt=dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    kv_len = max_seq
+    c_unit = {}
+    for i, kind in enumerate(unit):
+        c: dict = {}
+        if kind in ("attn", "moe", "cross"):
+            c["self"] = {"k": arr((reps, batch, hkv, kv_len, hd)),
+                         "v": arr((reps, batch, hkv, kv_len, hd))}
+            if kind == "cross":
+                mem_len = cfg.encoder_seq or cfg.n_img_tokens
+                c["cross"] = {"k": arr((reps, batch, hkv, mem_len, hd)),
+                              "v": arr((reps, batch, hkv, mem_len, hd))}
+        else:  # mamba / hybrid
+            s = cfg.ssm
+            gn = s.n_groups * s.d_state
+            c["mamba"] = {
+                "conv_x": arr((reps, batch, s.conv_width - 1,
+                               cfg.d_inner)),
+                "conv_b": arr((reps, batch, s.conv_width - 1, gn)),
+                "conv_c": arr((reps, batch, s.conv_width - 1, gn)),
+                "ssm": arr((reps, batch, cfg.n_ssm_heads, s.d_state,
+                            s.head_dim), jnp.float32),
+            }
+            if kind == "hybrid":
+                c["shared"] = {"k": arr((reps, batch, hkv, kv_len, hd)),
+                               "v": arr((reps, batch, hkv, kv_len, hd))}
+        c_unit[str(i)] = c
+    return c_unit
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    """Cache pytree mirroring the stage structure."""
+    return [stage_cache(cfg, unit, reps, batch, max_seq, dtype, abstract)
+            for unit, reps in cfg.stages]
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, max_seq: int, *,
+            frames=None, img_embeds=None):
+    """Run the prompt through the model, filling the KV/SSM caches.
+    Returns (last-token logits, caches).
+
+    Note: sliding-window caches hold only the last `window` positions at
+    decode time; prefill writes from position 0 (prompt <= window assumed
+    for SWA archs in the dry-run shapes — decode_32k uses the cache the
+    paper's shapes prescribe)."""
+    b, s = tokens.shape
+    caches = init_cache(cfg, b, max_seq)
+    hidden, _, caches, memory = forward(
+        cfg, params, tokens, frames=frames, img_embeds=img_embeds,
+        caches=caches, pos=0)
+    logits = unembed(cfg, params, hidden[:, -1:, :])
+    return logits, caches, memory
+
+
+def decode_step(cfg: ModelConfig, params: Params, caches, token, pos, *,
+                memory=None):
+    """One decode step. token: (B, 1) ids; pos: scalar current length.
+    Returns (logits (B,1,V), new_caches)."""
+    positions = jnp.full((token.shape[-1],), 0) + pos
+    hidden, _, caches, _ = forward(
+        cfg, params, token, memory=memory, positions=positions,
+        caches=caches, pos=pos)
+    return unembed(cfg, params, hidden), caches

@@ -1,0 +1,133 @@
+"""Batched serving engine: fixed-slot continuous batching.
+
+The engine keeps ``n_slots`` decode slots over one shared KV/state cache.
+Incoming requests queue up; free slots are refilled between decode steps
+(prefill writes the prompt into the slot's cache rows).  One decode step
+advances every active slot by a token — the standard slot-based
+continuous-batching scheme, driven entirely at the host level so the
+device-side step functions stay pure.
+
+Greedy sampling; per-slot stop at max_new_tokens or EOS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import config as mcfg
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: mcfg.ModelConfig, params, *, n_slots: int = 4,
+                 max_seq: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int64)
+        self.caches = M.init_cache(cfg, n_slots, max_seq)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    # -- host-side scheduling --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _refill(self) -> None:
+        """Prefill queued requests into free slots, one at a time.
+
+        Slot prefill runs the prompt through the model with a batch-1 cache
+        then writes the rows into the shared cache at the slot index."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            prompt = jnp.asarray([req.prompt], dtype=jnp.int32)
+            logits, cache1, _ = M.prefill(self.cfg, self.params, prompt,
+                                          max_seq=self.max_seq)
+            # copy the slot's cache rows (batch dim = 1 -> slot)
+            def write(shared, one):
+                return shared.at[:, slot:slot + 1].set(one)
+            self.caches = jax.tree.map(write, self.caches, cache1)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            self.slots[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+
+    def _retire(self) -> None:
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if len(req.output) >= req.max_new_tokens or \
+                    (req.eos is not None and req.output
+                     and req.output[-1] == req.eos) or \
+                    self.slot_pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.slots[i] = None
+
+    def step(self) -> int:
+        """One engine tick: refill, decode every active slot, retire."""
+        self._refill()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        # decode uses a single shared pos: slots decode in lockstep from
+        # their own positions via per-slot rope positions; the simple
+        # engine uses max(pos) for the cache write index of each slot by
+        # running per-distinct-pos groups (host simplicity over elegance)
+        for pos in sorted({int(self.slot_pos[i]) for i in active}):
+            group = [i for i in active if int(self.slot_pos[i]) == pos]
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            for i in group:
+                toks[i, 0] = self.slots[i].output[-1]
+            logits, new_caches = self._decode(
+                self.params, self.caches, jnp.asarray(toks), pos)
+            # merge only the stepped slots' cache rows + outputs
+            sel = np.zeros(self.n_slots, bool)
+            for i in group:
+                sel[i] = True
+            sel_j = jnp.asarray(sel)
+
+            def merge(new, old):
+                b_axis = 1  # (reps, B, ...)
+                shape = [1] * new.ndim
+                shape[b_axis] = self.n_slots
+                m = sel_j.reshape(shape)
+                return jnp.where(m, new, old)
+
+            self.caches = jax.tree.map(merge, new_caches, self.caches)
+            for i in group:
+                tok = int(jnp.argmax(logits[i, -1]))
+                self.slots[i].output.append(tok)
+                self.slot_pos[i] += 1
+        self._retire()
+        return len(active)
+
+    def run(self, max_ticks: int = 256) -> list[Request]:
+        finished: list[Request] = []
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+train step on CPU, asserting output shapes and no NaNs; plus a
+prefill+decode step for every arch (all ten have a decoder)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (decode_step, forward, init_params, loss_fn,
+                          prefill, smoke_config, unembed)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+ARCHS = configs.all_archs()
+
+
+def _extras(cfg, batch, key):
+    extra = {}
+    if cfg.encoder_layers:
+        extra["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_img_tokens:
+        extra["img_embeds"] = jax.random.normal(
+            key, (batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    return extra
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_is_wellformed(arch):
+    cfg = configs.get(arch)
+    assert cfg.param_count() > 1e8 or cfg.family in ("audio",)
+    assert sum(len(u) * r for u, r in cfg.stages) == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(configs.get(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    b, s = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 1, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    batch.update(_extras(cfg, b, jax.random.PRNGKey(2)))
+
+    (loss, metrics), grads = jax.value_and_grad(
+        functools.partial(loss_fn, cfg), has_aux=True)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) == pytest.approx(np.log(cfg.vocab), rel=0.15)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), arch
+
+    # one optimizer step must keep everything finite
+    ocfg = AdamWConfig(warmup_steps=0)
+    state = adamw_init(params)
+    params2, state, om = adamw_update(ocfg, params, grads, state)
+    for leaf in jax.tree.leaves(params2):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = smoke_config(configs.get(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 1, cfg.vocab)
+    extra = _extras(cfg, b, jax.random.PRNGKey(2))
+    hidden, aux, _, _ = forward(cfg, params, tokens, **extra)
+    assert hidden.shape == (b, s, cfg.d_model)
+    logits = unembed(cfg, params, hidden)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_matches_forward(arch):
+    cfg = smoke_config(configs.get(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = 2
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, 17), 1, cfg.vocab)
+    extra = _extras(cfg, b, jax.random.PRNGKey(2))
+    _, caches, _mem = prefill(cfg, params, tokens[:, :16], max_seq=64,
+                              **extra)
+    logits, _ = decode_step(cfg, params, caches, tokens[:, 16:17], 16)
+    h, _, _, _ = forward(cfg, params, tokens, **extra)
+    want = unembed(cfg, params, h[:, -1:, :])
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(want, np.float32),
+        atol=0.15, rtol=0.15)  # bf16 accumulation-order tolerance
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_analytic_param_count_close(arch):
+    """6*N*D roofline depends on param_count(); keep it within 2% of the
+    real materialized count (on the smoke config, where both are cheap)."""
+    cfg = smoke_config(configs.get(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_real = sum(x.size for x in jax.tree.leaves(params))
+    n_est = cfg.param_count()
+    assert abs(n_real - n_est) / n_real < 0.05, (arch, n_real, n_est)
+
+
+def test_full_param_counts_in_expected_range():
+    """Sanity of the headline parameter counts (documented families)."""
+    expect = {
+        "qwen2-7b": (6e9, 9e9),
+        "qwen2.5-14b": (13e9, 16e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "h2o-danube-1.8b": (1.5e9, 2.2e9),
+        "llama4-scout-17b-a16e": (95e9, 125e9),     # total (not active)
+        "phi3.5-moe-42b-a6.6b": (39e9, 46e9),
+        "whisper-small": (0.1e9, 0.35e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+        "mamba2-1.3b": (1.1e9, 1.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_smaller_than_total():
+    for arch in ("llama4-scout-17b-a16e", "phi3.5-moe-42b-a6.6b"):
+        cfg = configs.get(arch)
+        assert cfg.active_param_count() < 0.45 * cfg.param_count(), arch

@@ -1,0 +1,94 @@
+"""Area & power model tests — exact reproduction of paper Tables 2-3, Fig 8."""
+import pytest
+
+from repro.core import area, power
+
+
+def test_table3_16pe_row_matches_paper():
+    row = area.table3(sizes=(16,))[0]
+    assert row["proposed_router_lut_pct"] == pytest.approx(0.31, abs=0.01)
+    assert row["proposed_router_ff_pct"] == pytest.approx(0.11, abs=0.01)
+    assert row["proposed_router_bram_pct"] == pytest.approx(0.54, abs=0.01)
+    assert row["ring_switch_lut_pct"] == pytest.approx(0.25, abs=0.01)
+    assert row["ring_switch_ff_pct"] == pytest.approx(0.21, abs=0.01)
+    assert row["ring_switch_bram_pct"] == pytest.approx(2.72, abs=0.01)
+    assert row["conventional_lut_pct"] == pytest.approx(2.58, abs=0.01)
+    assert row["conventional_ff_pct"] == pytest.approx(1.06, abs=0.01)
+    assert row["conventional_bram_pct"] == pytest.approx(5.44, abs=0.01)
+
+
+def test_table3_1024pe_row_matches_paper():
+    row = area.table3(sizes=(1024,))[0]
+    assert row["proposed_router_lut_pct"] == pytest.approx(20.06, abs=0.02)
+    assert row["proposed_router_bram_pct"] == pytest.approx(34.83, abs=0.02)
+    assert row["ring_switch_lut_pct"] == pytest.approx(15.90, abs=0.02)
+    assert row["ring_switch_bram_pct"] == pytest.approx(174.15, abs=0.05)
+    assert row["conventional_lut_pct"] == pytest.approx(165.23, abs=0.05)
+    assert row["conventional_ff_pct"] == pytest.approx(67.60, abs=0.05)
+    assert row["conventional_bram_pct"] == pytest.approx(348.30, abs=0.1)
+
+
+def test_1024_block_totals_match_paper_text():
+    # §7.1.1: "155776 LUTs, 177152 FFs and 3072 BRAM blocks"
+    r = area.ring_mesh_total_area(1024)
+    assert (r.lut, r.ff, r.bram) == (155776, 177152, 3072)
+
+
+def test_savings_convention_matches_paper():
+    s = area.saving_vs_conventional(1024)
+    assert s["lut_saving_pct"] == pytest.approx(129.3, abs=0.1)
+    assert s["ff_saving_pct"] == pytest.approx(47.2, abs=0.1)
+    assert s["bram_saving_pct"] == pytest.approx(139.3, abs=0.1)
+    s16 = area.saving_vs_conventional(16)
+    assert s16["lut_saving_pct"] == pytest.approx(2.0, abs=0.1)
+
+
+def test_single_block_resources():
+    # §7.1.1: one block = 2434 LUTs / 2768 FFs / 48 BRAMs
+    r = area.ring_mesh_total_area(16)
+    assert (r.lut, r.ff, r.bram) == (2434, 2768, 48)
+
+
+def test_power_calibration_points():
+    # Reported watt figures reproduced within the affine fit's error
+    assert power.ring_mesh_power(16).total_w == pytest.approx(0.89, rel=0.15)
+    assert power.ring_mesh_power(128).total_w == pytest.approx(2.4, rel=0.15)
+    assert power.ring_mesh_power(256).total_w == pytest.approx(3.979, rel=0.15)
+    assert power.flat_mesh_power(128).total_w == pytest.approx(4.5, rel=0.15)
+    assert power.flat_mesh_power(1024).total_w == pytest.approx(32.8, rel=0.05)
+
+
+def test_paper_claim_c4_relative_power():
+    # C4: flat mesh uses ~141.3% more power at 1024 PEs
+    assert power.relative_extra_power(1024) == pytest.approx(141.3, abs=5.0)
+
+
+def test_power_crossover_small_networks():
+    # §7.1.2: at 16 cores both designs consume almost the same power
+    rm = power.ring_mesh_power(16).total_w
+    fm = power.flat_mesh_power(16).total_w
+    assert abs(rm - fm) / fm < 0.25
+    # ... and the flat mesh becomes strictly worse from 128 cores on
+    for n in (128, 256, 512, 1024):
+        assert power.flat_mesh_power(n).total_w > power.ring_mesh_power(n).total_w
+
+
+def test_static_fraction_shrinks_with_size():
+    # Fig. 7 trend: dynamic power dominates as the network grows
+    fracs = [power.ring_mesh_power(n).row()["static_pct"]
+             for n in (16, 64, 256, 1024)]
+    assert fracs == sorted(fracs, reverse=True)
+    assert fracs[0] > 40 and fracs[-1] < 10
+
+
+def test_ringlets_dominate_router_power_at_scale():
+    # §7.1.2: at 256 cores ringlets consume >2x the routers' power
+    p = power.ring_mesh_power(256)
+    assert p.ringlet_w > 2.0 * p.router_w
+
+
+def test_activity_coupling():
+    lo = power.ring_mesh_power(256, activity=0.5)
+    hi = power.ring_mesh_power(256, activity=1.5)
+    assert lo.total_w < hi.total_w
+    assert lo.static_w == hi.static_w

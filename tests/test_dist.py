@@ -1,0 +1,166 @@
+"""Distribution-layer tests.
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
+process keeps seeing exactly one device (smoke tests depend on that).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import compression
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice(code: str, devices: int = 8) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    script = textwrap.dedent(code)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# single-device: quantization
+# ---------------------------------------------------------------------------
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = compression.quantize(x)
+    err = jnp.abs(compression.dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_accumulates():
+    x = jnp.full((16,), 0.001)
+    residual = jnp.zeros((16,))
+    total = jnp.zeros((16,))
+    for _ in range(30):
+        q, s, residual = compression.quantize_with_feedback(x, residual)
+        total = total + compression.dequantize(q, s)
+    # with EF the long-run mean matches the signal
+    assert float(jnp.abs(total / 30 - x).max()) < 5e-4
+
+
+def test_quantize_zero_input():
+    q, s = compression.quantize(jnp.zeros((8,)))
+    assert float(jnp.abs(compression.dequantize(q, s)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# multi-device (subprocess)
+# ---------------------------------------------------------------------------
+def test_hierarchical_collectives_multidevice():
+    result = run_multidevice("""
+        import json, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import collectives, compression
+        mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 37))
+        sm = lambda f: jax.shard_map(f, mesh=mesh, in_specs=P(),
+                                     out_specs=P(), check_vma=False)
+        hier = sm(lambda v: collectives.hierarchical_psum(v))(x)
+        flat = sm(lambda v: jax.lax.psum(v, ("pod", "data")))(x)
+        comp = sm(lambda v: compression.compressed_psum(v, "pod"))(x)
+        podsum = sm(lambda v: jax.lax.psum(v, "pod"))(x)
+        print(json.dumps({
+            "hier_err": float(jnp.abs(hier - flat).max()),
+            "comp_rel": float(jnp.abs(comp - podsum).max()
+                              / jnp.abs(podsum).max()),
+        }))
+    """)
+    assert result["hier_err"] < 1e-5
+    assert result["comp_rel"] < 0.01
+
+
+def test_dp_grad_schedules_agree_multidevice():
+    result = run_multidevice("""
+        import json, functools, jax, jax.numpy as jnp
+        from repro.dist import context, data_parallel
+        from repro.models import ModelConfig, init_params, loss_fn
+        mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                          stages=((("attn",), 2),), head_dim=16, max_seq=32,
+                          loss_seq_chunk=16, remat=False)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 64)
+        batch = {"tokens": tokens, "labels": tokens}
+        lf = functools.partial(loss_fn, cfg)
+        with context.use_mesh(mesh):
+            lf_flat = data_parallel.make_dp_grad_fn(lf, mesh, schedule="flat")
+            lf_hier = data_parallel.make_dp_grad_fn(lf, mesh, schedule="hier")
+            (l0, gf), (l1, gh) = lf_flat(params, batch), lf_hier(params, batch)
+        err = max(float(jnp.abs(a - b).max())
+                  for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gh)))
+        print(json.dumps({"l0": float(l0), "l1": float(l1), "gerr": err}))
+    """)
+    assert result["l0"] == pytest.approx(result["l1"], rel=1e-5)
+    assert result["gerr"] < 1e-6
+
+
+def test_seq_sharded_decode_attention_multidevice():
+    result = run_multidevice("""
+        import json, jax, jax.numpy as jnp
+        from repro.dist import context, decode_attn
+        from repro.kernels import ref
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (2, 6, 1, 32))    # 6 heads: !%4
+        k = jax.random.normal(ks[1], (2, 3, 64, 32))   # 3 kv heads: !%4
+        v = jax.random.normal(ks[2], (2, 3, 64, 32))
+        errs = {}
+        for off, win in ((40, None), (63, 16), (0, None)):
+            with context.use_mesh(mesh):
+                out = decode_attn.seq_sharded_attention(
+                    q, k, v, causal=True, window=win, q_offset=off)
+            want = ref.attention_ref(q, k, v, causal=True, window=win,
+                                     q_offset=off)
+            errs[f"{off}_{win}"] = float(jnp.abs(out - want).max())
+        print(json.dumps(errs))
+    """)
+    for k, v in result.items():
+        assert v < 1e-5, (k, v)
+
+
+def test_sharding_rules_produce_valid_specs_multidevice():
+    result = run_multidevice("""
+        import json, jax
+        from repro.dist import sharding
+        from repro.models import ModelConfig, MoEConfig, abstract_params
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                          stages=((("moe",), 2),), head_dim=8, max_seq=32,
+                          moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32))
+        specs = sharding.param_specs(cfg, mesh)
+        shd = sharding.param_shardings(cfg, mesh)
+        ab = abstract_params(cfg)
+        # every spec rank matches its param rank; no axis repeated
+        bad = []
+        for (pa, s), (pb, a) in zip(
+                jax.tree_util.tree_flatten_with_path(specs)[0],
+                jax.tree_util.tree_flatten_with_path(ab)[0]):
+            flat = [x for part in s if part is not None
+                    for x in (part if isinstance(part, tuple) else (part,))]
+            if len(s) != len(a.shape) or len(flat) != len(set(flat)):
+                bad.append(str(pa))
+        print(json.dumps({"bad": bad, "n": len(jax.tree.leaves(specs))}))
+    """)
+    assert result["bad"] == []
+    assert result["n"] > 10

@@ -1,0 +1,206 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention, ref, ssd_scan
+from repro.kernels import ops
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # (B, Hq, Hkv, Sq, Skv, D, causal, window, bq, bk)
+    (1, 2, 2, 128, 128, 64, True, None, 64, 64),     # MHA causal
+    (2, 4, 2, 128, 128, 64, True, None, 64, 64),     # GQA
+    (1, 8, 1, 128, 128, 32, True, None, 32, 64),     # MQA
+    (1, 2, 2, 128, 128, 64, False, None, 64, 64),    # bidirectional (enc)
+    (1, 4, 4, 256, 256, 64, True, 64, 64, 64),       # sliding window
+    (1, 4, 2, 256, 256, 64, True, 100, 64, 64),      # SWA, window % block != 0
+    (2, 4, 2, 1, 256, 64, True, None, 1, 64),        # decode: 1 query token
+    (1, 4, 4, 64, 256, 64, True, None, 32, 64),      # chunked prefill tail
+    (1, 2, 2, 128, 128, 128, True, None, 128, 128),  # MXU-aligned d=128
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, hq, hkv, sq, skv, d, causal, window, bq, bk = case
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = rand(k0, (b, hq, sq, d), dtype)
+    k = rand(k1, (b, hkv, skv, d), dtype)
+    v = rand(k2, (b, hkv, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_scale_override():
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(k0, (1, 2, 64, 32), jnp.float32)
+    k = rand(k1, (1, 2, 64, 32), jnp.float32)
+    v = rand(k2, (1, 2, 64, 32), jnp.float32)
+    out = flash_attention(q, k, v, scale=0.5, block_q=32, block_k=32,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, scale=0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 2), hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    sq_blocks=st.integers(1, 3),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(b, hkv, group, sq_blocks, d, causal):
+    """Property: kernel == oracle over random GQA geometries."""
+    sq = 64 * sq_blocks
+    hq = hkv * group
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(b * 131 + sq), 3)
+    q = rand(k0, (b, hq, sq, d), jnp.float32)
+    k = rand(k1, (b, hkv, sq, d), jnp.float32)
+    v = rand(k2, (b, hkv, sq, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_window_one_attends_self_only():
+    """SWA with window=1: each token sees only itself -> out == v row."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(3), 2)
+    q = rand(k0, (1, 1, 64, 32), jnp.float32)
+    v = rand(k1, (1, 1, 64, 32), jnp.float32)
+    out = flash_attention(q, q, v, causal=True, window=1,
+                          block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    # (B, H, G, S, P, N, chunk)
+    (1, 2, 1, 64, 32, 16, 16),
+    (2, 4, 2, 128, 32, 16, 32),
+    (1, 4, 1, 128, 64, 32, 64),
+    (1, 8, 8, 64, 16, 16, 16),     # G == H (ungrouped)
+    (1, 2, 1, 128, 32, 16, 128),   # single chunk == whole sequence
+]
+
+
+def ssd_inputs(case, dtype):
+    b, h, g, s, p, n, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 5)
+    x = rand(ks[0], (b, h, s, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, s))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = rand(ks[3], (b, g, s, n), dtype)
+    cc = rand(ks[4], (b, g, s, n), dtype)
+    return x, dt, a, bb, cc, chunk
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_exact_recurrence(case, dtype):
+    x, dt, a, bb, cc, chunk = ssd_inputs(case, dtype)
+    out = ssd_scan(x, dt, a, bb, cc, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, dt, a, bb, cc)
+    looser = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **looser)
+
+
+def test_ssd_chunked_ref_matches_exact():
+    """The chunking algebra itself (independent of Pallas)."""
+    case = (2, 4, 2, 128, 32, 16, 32)
+    x, dt, a, bb, cc, chunk = ssd_inputs(case, jnp.float32)
+    got = ref.ssd_chunked_ref(x, dt, a, bb, cc, chunk=chunk)
+    want = ref.ssd_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-4, rtol=3e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunks=st.integers(1, 4), chunk=st.sampled_from([16, 32]),
+       h=st.sampled_from([1, 2, 4]))
+def test_ssd_state_passing_property(chunks, chunk, h):
+    """Property: chunk boundaries are invisible (state passing exact)."""
+    s = chunks * chunk
+    case = (1, h, 1, s, 16, 8, chunk)
+    x, dt, a, bb, cc, _ = ssd_inputs(case, jnp.float32)
+    out = ssd_scan(x, dt, a, bb, cc, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_ssd_decay_extremes():
+    """a -> 0 keeps full history; huge dt*|a| forgets instantly."""
+    b, h, g, s, p, n = 1, 1, 1, 64, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = rand(ks[0], (b, h, s, p), jnp.float32)
+    dt = jnp.ones((b, h, s))
+    bb = rand(ks[1], (b, g, s, n), jnp.float32)
+    cc = rand(ks[2], (b, g, s, n), jnp.float32)
+    # near-zero decay: state accumulates everything
+    a0 = jnp.full((h,), -1e-6)
+    y = ssd_scan(x, dt, a0, bb, cc, chunk=16, interpret=True)
+    want = ref.ssd_ref(x, dt, a0, bb, cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-3,
+                               rtol=1e-3)
+    # huge decay: y_t ~= dt * (c_t.b_t) x_t only
+    a1 = jnp.full((h,), -50.0)
+    y1 = ssd_scan(x, dt, a1, bb, cc, chunk=16, interpret=True)
+    local = jnp.einsum("bgsn,bgsn->bs", cc, bb)[:, None, :, None] * x
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(local), atol=1e-3,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ops.py dispatch layer
+# ---------------------------------------------------------------------------
+def test_ops_attention_impls_agree():
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = rand(k0, (1, 4, 128, 64), jnp.float32)
+    k = rand(k1, (1, 2, 128, 64), jnp.float32)
+    v = rand(k2, (1, 2, 128, 64), jnp.float32)
+    a = ops.attention(q, k, v, impl="xla")
+    b = ops.attention(q, k, v, impl="pallas", block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_ops_ssd_impls_agree():
+    x, dt, a, bb, cc, chunk = ssd_inputs((1, 2, 1, 64, 32, 16, 16),
+                                         jnp.float32)
+    y0 = ops.ssd(x, dt, a, bb, cc, chunk=chunk, impl="xla")
+    y1 = ops.ssd(x, dt, a, bb, cc, chunk=chunk, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=3e-4,
+                               rtol=3e-4)
+
+
+def test_ops_rejects_unknown_impl():
+    with pytest.raises(ValueError):
+        ops.attention(jnp.zeros((1, 1, 8, 8)), jnp.zeros((1, 1, 8, 8)),
+                      jnp.zeros((1, 1, 8, 8)), impl="cuda")

@@ -1,0 +1,112 @@
+"""Launch-layer tests: HLO parsing, shapes registry, and a miniature
+dry-run (lower+compile on a small forced-device mesh in a subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro import configs
+from repro.launch import hlo, shapes
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+SAMPLE = """
+  %all-reduce.1 = f32[1024]{0} all-reduce(%x), replica_groups=[4,2]<=[8]
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%z), replica_groups=[1,8]<=[8]
+  %cp = s8[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ard = f32[16]{0} all-reduce-done(%h)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = hlo.collective_bytes(SAMPLE)
+    by = out["bytes_by_kind"]
+    assert by["all-reduce"] == 1024 * 4          # result == operand
+    assert by["all-gather"] == 64 * 128 * 2 // 4  # result / group size
+    assert by["reduce-scatter"] == 32 * 4 * 8    # result * group size
+    assert by["collective-permute"] == 100
+    assert out["count_by_kind"]["all-reduce"] == 1  # -done not double counted
+
+
+def test_op_census_and_fusions():
+    txt = "%f = f32[4]{0} fusion(%a), calls=%c\n%g = f32[4]{0} fusion(%b)"
+    assert hlo.fusion_count(txt) == 2
+
+
+# ---------------------------------------------------------------------------
+# shapes / cells
+# ---------------------------------------------------------------------------
+def test_forty_cells_defined():
+    cells = [(a, s) for a in configs.all_archs() for s in shapes.SHAPES]
+    assert len(cells) == 40
+    skipped = [c for c in cells if not shapes.cell_supported(*c)[0]]
+    assert len(skipped) == 7                      # full-attn long_500k
+    assert all(s == shapes.LONG_500K for _, s in skipped)
+    for a in ("mamba2-1.3b", "zamba2-1.2b", "h2o-danube-1.8b"):
+        assert shapes.cell_supported(a, shapes.LONG_500K)[0]
+
+
+def test_batch_specs_shapes():
+    cfg = configs.get("qwen2-7b")
+    cell = shapes.make_cell("qwen2-7b", shapes.TRAIN_4K)
+    d = shapes.batch_specs(cfg, cell)
+    assert d["tokens"].shape == (256, 4096)
+    cell = shapes.make_cell("qwen2-7b", shapes.DECODE_32K)
+    d = shapes.batch_specs(cfg, cell)
+    assert d["tokens"].shape == (128, 1)
+    cfgw = configs.get("whisper-small")
+    cellw = shapes.make_cell("whisper-small", shapes.TRAIN_4K)
+    dw = shapes.batch_specs(cfgw, cellw)
+    assert dw["frames"].shape == (256, 1500, 768)
+
+
+# ---------------------------------------------------------------------------
+# miniature dry-run (8 forced devices, smoke config, tiny cell)
+# ---------------------------------------------------------------------------
+def test_mini_dryrun_compiles_and_reports():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, dataclasses
+        import jax
+        from repro import configs
+        from repro.dist import context
+        from repro.launch import hlo, mesh as mesh_mod, shapes, steps
+        from repro.models import smoke_config
+
+        cfg = smoke_config(configs.get("qwen2-7b"))
+        mesh = mesh_mod.make_dev_mesh((2, 2, 2), ("pod", "data", "model"))
+        out = {}
+        for shape, kind in (("train_4k", "train"), ("decode_32k", "decode")):
+            cell = dataclasses.replace(
+                shapes.make_cell("qwen2-7b", shape),
+                seq_len=64, global_batch=8)
+            with context.use_mesh(mesh):
+                case = steps.make_case(cfg, cell, mesh)
+                compiled = case.fn.lower(*case.args).compile()
+                cost = compiled.cost_analysis()
+                coll = hlo.collective_bytes(compiled.as_text())
+            out[shape] = {
+                "flops": float(cost.get("flops", 0)),
+                "coll": coll["total_bytes"],
+                "mem": int(compiled.memory_analysis().temp_size_in_bytes),
+            }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["train_4k"]["flops"] > 0
+    assert out["train_4k"]["coll"] > 0          # DP/TP collectives present
+    assert out["decode_32k"]["mem"] > 0

@@ -1,0 +1,99 @@
+"""Morphing tests — §5.1: bypass / switch-off semantics + RFT."""
+import numpy as np
+import pytest
+
+from repro.core import morph, packet as pk, sim, topology
+
+
+def fresh_controller(n=64):
+    t = topology.build_ring_mesh(n)
+    return morph.MorphController(t), t
+
+
+def test_switch_off_drops_traffic():
+    ctl, t = fresh_controller(64)
+    # switch off all four ringlet uplinks of router/block 0
+    m = pk.MorphPacket(hl=1, ers=0,
+                       link_states=(0, 0, 0, 0, 2, 2, 2, 2))
+    ctl.apply(m, target=0)
+    # traffic from block 0 to block 1 now dies at the RS2R boundary
+    src, dst = 0, 16  # PE 0 in block 0 -> PE in block 1
+    assert t.hops(src, dst) == -1
+    # intra-ringlet traffic still flows
+    assert t.hops(0, 2) > 0
+
+
+def test_switch_off_is_reversible():
+    ctl, t = fresh_controller(64)
+    before = t.route_table.copy()
+    m = pk.MorphPacket(hl=1, ers=0, link_states=(2,) * 8)
+    ctl.apply(m, target=0)
+    assert not np.array_equal(t.route_table, before)
+    ctl.reset()
+    assert np.array_equal(t.route_table, before)
+
+
+def test_bypass_mesh_router_passes_straight_through():
+    ctl, t = fresh_controller(64)  # 2x2 blocks
+    # bypass the east input of router 1 (block at (1,0)): traffic entering
+    # from the west (router 0) is presented straight to its east output —
+    # block (1,0) has no east neighbour, so east-in traffic is dropped,
+    # proving the routing logic was skipped.
+    groups = ctl.router_links(1)
+    west_in = groups[morph.LC_WEST]
+    assert west_in  # exists
+    m = pk.MorphPacket(hl=1, ers=0,
+                       link_states=(0, 0, 0, 1, 0, 0, 0, 0))
+    ctl.apply(m, target=1)
+    for q in west_in:
+        for d in range(t.n_pes):
+            nxt = t.route_table[q, d]
+            # never routed into this router's local ringlets any more
+            assert nxt == topology.INVALID or \
+                t.link_kind[nxt] != topology.R2RS
+
+
+def test_morph_packet_wire_roundtrip_applies():
+    """End-to-end: encode a morph packet through the escape protocol,
+    decode at the 'router', apply, and observe the route change."""
+    ctl, t = fresh_controller(64)
+    m = pk.MorphPacket(hl=1, ers=64, link_states=(0, 0, 0, 0, 2, 2, 2, 2))
+    wire = pk.escape_stream([("morph", m.encode())])
+    events = pk.unescape_stream(wire)
+    assert len(events) == 1 and events[0][0] == "morph"
+    ctl.apply_payload(events[0][1], target=0)
+    assert t.hops(0, 16) == -1
+
+
+def test_sim_with_morphed_topology_drops_and_survives():
+    ctl, t = fresh_controller(64)
+    m = pk.MorphPacket(hl=1, ers=0, link_states=(0, 0, 0, 0, 2, 2, 2, 2))
+    ctl.apply(m, target=0)
+    cfg = sim.SimConfig(cycles=600, warmup=200, inj_rate=0.2,
+                        pattern="uniform", seed=0)
+    r = sim.simulate(t, cfg)
+    assert r.delivered > 0      # rest of the fabric still works
+    assert r.dropped > 0        # switched-off region drops
+    assert r.lost == 0
+
+
+def test_fault_bypass_recovers_reachability_elsewhere():
+    """Resiliency (§5.1): switching off one ringlet leaves all other
+    ringlets mutually reachable."""
+    ctl, t = fresh_controller(64)
+    m = pk.MorphPacket(hl=1, ers=0, link_states=(0, 0, 0, 0, 2, 0, 0, 0))
+    ctl.apply(m, target=0)  # kill ringlet 0 of block 0 only
+    for src in (4, 20, 40):
+        for dst in (8, 24, 60):
+            if src != dst:
+                assert t.hops(src, dst) > 0
+
+
+def test_rft_roundtrip():
+    bits = np.zeros((8, 8), dtype=bool)
+    bits[0, 3] = bits[7, 7] = bits[2, 5] = True
+    rft = morph.RoutingFlowTable(bits=bits)
+    a, b = rft.to_flits()
+    rft2 = morph.RoutingFlowTable.from_flits(a, b)
+    assert np.array_equal(rft.bits, rft2.bits)
+    assert rft2.permits(0, 3) and not rft2.permits(3, 0)

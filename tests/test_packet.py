@@ -1,0 +1,110 @@
+"""Packet codec tests — paper Fig. 5 / Fig. 6 / §5.1 escape protocol."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packet as pk
+
+
+def test_header_widths():
+    assert pk.HEADER_BITS == 11
+    assert pk.FLIT_BITS == 43
+    assert pk.MAX_PES == 1024
+
+
+@given(st.integers(0, 7), st.integers(0, 7), st.integers(0, 3),
+       st.integers(0, 3), st.integers(0, 1))
+def test_header_roundtrip(mx, my, rg, pe, vc):
+    addr = pk.PEAddress(mx, my, rg, pe)
+    hdr = pk.encode_header(addr, vc)
+    assert 0 <= hdr < (1 << pk.HEADER_BITS)
+    addr2, vc2 = pk.decode_header(hdr)
+    assert addr2 == addr and vc2 == vc
+
+
+@given(st.integers(0, 7), st.integers(0, 7), st.integers(0, 3),
+       st.integers(0, 3), st.integers(0, (1 << 32) - 1))
+def test_flit_roundtrip(mx, my, rg, pe, payload):
+    addr = pk.PEAddress(mx, my, rg, pe)
+    flit = pk.encode_flit(addr, payload)
+    assert 0 <= flit < (1 << pk.FLIT_BITS)
+    addr2, _, payload2 = pk.decode_flit(flit)
+    assert addr2 == addr and payload2 == payload
+
+
+@given(st.integers(0, 1023), st.integers(1, 8))
+def test_flat_address_roundtrip(flat, bx):
+    if flat >= bx * 8 * pk.PES_PER_BLOCK:
+        flat = flat % (bx * pk.PES_PER_BLOCK)
+    addr = pk.pe_address(flat, blocks_x=bx)
+    assert addr.flat(blocks_x=bx) == flat
+
+
+def test_vc_destination_policy():
+    # §4.2: "Packets destined for 00 and 01 will be holding at VC-0"
+    assert pk.vc_for_destination(0) == 0
+    assert pk.vc_for_destination(1) == 0
+    assert pk.vc_for_destination(2) == 1
+    assert pk.vc_for_destination(3) == 1
+
+
+@given(st.integers(0, 1), st.integers(0, 1023),
+       st.lists(st.sampled_from([pk.LINK_ACTIVE, pk.LINK_BYPASS, pk.LINK_OFF]),
+                min_size=8, max_size=8),
+       st.integers(0, 15))
+def test_morph_roundtrip(hl, ers, states, pts_half):
+    m = pk.MorphPacket(hl=hl, ers=ers, link_states=tuple(states),
+                       pts=pts_half * 2)
+    word = m.encode()
+    assert word != pk.ESCAPE_PAYLOAD  # LSB guard
+    m2 = pk.decode_morph(word)
+    assert m2 == m
+
+
+def test_morph_pts_lsb_guard():
+    with pytest.raises(ValueError):
+        pk.MorphPacket(hl=0, ers=0, link_states=(0,) * 8, pts=1)
+
+
+def test_escape_protocol_roundtrip():
+    morph = pk.MorphPacket(hl=1, ers=16, link_states=(0, 1, 2, 0, 0, 0, 0, 0))
+    events = [
+        ("data", 0x12345678),
+        ("data", pk.ESCAPE_PAYLOAD),    # literal all-ones data word
+        ("morph", morph.encode()),
+        ("data", 0),
+    ]
+    wire = pk.escape_stream(events)
+    # the literal all-ones word costs an extra flit; the morph costs one
+    assert len(wire) == len(events) + 2
+    assert pk.unescape_stream(wire) == events
+
+
+def test_escape_truncation_detected():
+    with pytest.raises(ValueError):
+        pk.unescape_stream([pk.ESCAPE_PAYLOAD])
+
+
+@given(st.lists(st.tuples(
+    st.sampled_from(["data", "morph"]),
+    st.integers(0, (1 << 32) - 1)), max_size=32))
+def test_escape_stream_property(events):
+    # morph words may not be all-ones (guaranteed by the PTS LSB guard)
+    events = [(k, w if k == "data" else (w & ~1) & 0xFFFFFFFE)
+              for k, w in events]
+    events = [(k, w) for k, w in events
+              if not (k == "morph" and w == pk.ESCAPE_PAYLOAD)]
+    assert pk.unescape_stream(pk.escape_stream(events)) == events
+
+
+def test_bitreverse_transpose_are_permutations():
+    for bits in (4, 5, 6, 8, 10):
+        n = 1 << bits
+        x = np.arange(n)
+        br = pk.bitreverse(x, bits)
+        tp = pk.transpose_perm(x, bits)
+        assert sorted(br.tolist()) == list(range(n))
+        assert sorted(tp.tolist()) == list(range(n))
+        # bit reversal is an involution
+        assert np.array_equal(pk.bitreverse(br, bits), x)

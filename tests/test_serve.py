@@ -1,0 +1,72 @@
+"""Serving engine tests (continuous batching over shared caches)."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import init_params, smoke_config
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke_config(configs.get("qwen2-7b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_single_request_completes(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=64)
+    r = Request(rid=0, prompt=[5, 6, 7], max_new_tokens=5)
+    eng.submit(r)
+    eng.run()
+    assert r.done and len(r.output) == 5
+    assert all(0 <= t < cfg.vocab for t in r.output)
+
+
+def test_more_requests_than_slots(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2 + i], max_new_tokens=3 + i % 3)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    for i, r in enumerate(reqs):
+        assert len(r.output) == 3 + i % 3
+
+
+def test_batched_equals_sequential(engine_setup):
+    """Slot batching must not change greedy decoding results."""
+    cfg, params = engine_setup
+    prompts = [[3, 4, 5], [10, 11], [7, 8, 9, 10]]
+
+    solo_outputs = []
+    for i, prmpt in enumerate(prompts):
+        eng = ServeEngine(cfg, params, n_slots=1, max_seq=64)
+        r = Request(rid=i, prompt=prmpt, max_new_tokens=4)
+        eng.submit(r)
+        eng.run()
+        solo_outputs.append(r.output)
+
+    eng = ServeEngine(cfg, params, n_slots=3, max_seq=64)
+    reqs = [Request(rid=i, prompt=prmpt, max_new_tokens=4)
+            for i, prmpt in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r, want in zip(reqs, solo_outputs):
+        assert r.output == want, (r.rid, r.output, want)
+
+
+def test_slot_reuse_after_retire(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=64)
+    a = Request(rid=0, prompt=[2, 3], max_new_tokens=2)
+    b = Request(rid=1, prompt=[4, 5, 6], max_new_tokens=2)
+    eng.submit(a)
+    eng.submit(b)
+    eng.run()
+    assert a.done and b.done

@@ -1,0 +1,97 @@
+"""Simulator behaviour tests: conservation, saturation sanity, paper trends."""
+import numpy as np
+import pytest
+
+from repro.core import sim, topology
+
+
+def run(name, n, **kw):
+    defaults = dict(cycles=800, warmup=300, inj_rate=0.25, pattern="uniform",
+                    seed=0)
+    defaults.update(kw)
+    t = topology.build(name, n)
+    return sim.simulate(t, sim.SimConfig(**defaults))
+
+
+@pytest.mark.parametrize("name", ["ring_mesh", "flat_mesh"])
+@pytest.mark.parametrize("pattern", sim.PATTERNS)
+def test_no_lost_flits(name, pattern):
+    r = run(name, 64, pattern=pattern, inj_rate=1.0,
+            locality_ringlet=0.5, locality_block=0.3)
+    assert r.lost == 0
+
+
+@pytest.mark.parametrize("name", ["ring_mesh", "flat_mesh"])
+def test_low_load_throughput_equals_offered(name):
+    # At 5% injection nothing saturates: delivery rate == offered rate.
+    r = run(name, 64, inj_rate=0.05, cycles=1500, warmup=500)
+    offered_rate = r.offered / r.measured_cycles
+    assert r.dropped == 0
+    assert r.throughput == pytest.approx(offered_rate, rel=0.05)
+
+
+def test_latency_at_least_path_length():
+    r = run("ring_mesh", 16, inj_rate=0.05)
+    # min possible: inject + >=1 hop + eject
+    assert r.avg_latency >= 2.0
+
+
+@pytest.mark.parametrize("name", ["ring_mesh", "flat_mesh"])
+def test_latency_monotone_in_load(name):
+    lats = [run(name, 64, inj_rate=ir, seed=3,
+                locality_ringlet=0.5, locality_block=0.3).avg_latency
+            for ir in (0.1, 0.5, 1.0)]
+    assert lats[0] <= lats[1] * 1.1  # allow small noise
+    assert lats[0] < lats[2]
+
+
+def test_saturation_does_not_collapse():
+    """Post-deadlock-fix regression: at full load with locality the
+    ring-mesh must sustain >0.3 packets/PE/cycle (it used to gridlock)."""
+    for n in (64, 256):
+        r = run("ring_mesh", n, inj_rate=1.0, cycles=1200, warmup=400,
+                **sim.PAPER_LOCALITY)
+        assert r.per_pe_throughput > 0.3, (n, r.row())
+
+
+def test_paper_claim_c6_throughput_doubles():
+    """C6: throughput grows ~2x when the PE count doubles (locality mode)."""
+    thr = {}
+    for n in (64, 128, 256):
+        thr[n] = run("ring_mesh", n, inj_rate=0.625, cycles=1200, warmup=400,
+                     seed=1, **sim.PAPER_LOCALITY).throughput
+    assert 1.6 < thr[128] / thr[64] < 2.4
+    assert 1.6 < thr[256] / thr[128] < 2.4
+
+
+def test_paper_claim_c5_latency_advantage_at_scale():
+    """C5: ring-mesh latency <= flat-mesh latency at 256 PEs under the
+    paper's locality-heavy operating regime."""
+    rm = run("ring_mesh", 256, inj_rate=0.625, cycles=1200, warmup=400,
+             seed=1, **sim.PAPER_LOCALITY)
+    fm = run("flat_mesh", 256, inj_rate=0.625, cycles=1200, warmup=400,
+             seed=1, **sim.PAPER_LOCALITY)
+    assert rm.avg_latency < fm.avg_latency
+    assert rm.throughput > fm.throughput
+
+
+def test_deterministic_given_seed():
+    a = run("ring_mesh", 16, seed=7)
+    b = run("ring_mesh", 16, seed=7)
+    assert a.row() == b.row()
+
+
+def test_single_packet_block_transaction_latency():
+    """§4.2 / C8: one cross-ringlet transfer in an idle block is fast.
+    With Ir=1/16 on 16 PEs the network is essentially idle; mean latency
+    should be <= 8 cycles one-way (12-cycle transaction bound)."""
+    r = run("ring_mesh", 16, inj_rate=1.0 / 16, cycles=2000, warmup=200)
+    assert r.avg_latency <= 8.0
+
+
+def test_patterns_are_fixed_permutations():
+    perm = sim.pattern_destinations("transpose", 64)
+    assert sorted(perm.tolist()) == list(range(64))
+    perm = sim.pattern_destinations("bit_reversal", 256)
+    assert sorted(perm.tolist()) == list(range(256))
+    assert sim.pattern_destinations("uniform", 64) is None

@@ -1,0 +1,107 @@
+"""Topology/routing invariants — §3, §4, §6 of the paper."""
+import numpy as np
+import pytest
+
+from repro.core import analytic, packet as pk, topology
+
+
+SIZES = (16, 32, 64)  # exhaustive route checks; larger sizes spot-checked
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("name", ["ring_mesh", "flat_mesh"])
+def test_every_pair_routable(name, n):
+    t = topology.build(name, n)
+    for src in range(n):
+        for dst in range(n):
+            if src == dst:
+                continue
+            assert t.hops(src, dst) >= 1
+
+
+@pytest.mark.parametrize("n", SIZES + (128, 256))
+def test_ring_mesh_diameter_formula(n):
+    # §6.1: Δmax = N_R + N_C + 6
+    t = topology.build_ring_mesh(n)
+    sample = None if n <= 64 else 4000
+    assert analytic.measured_diameter(t, sample=sample) <= \
+        analytic.ring_mesh_diameter(n)
+    if n <= 64:  # exhaustive: the bound is achieved exactly
+        assert analytic.measured_diameter(t) == analytic.ring_mesh_diameter(n)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_flat_mesh_diameter_formula(n):
+    t = topology.build_flat_mesh(n)
+    assert analytic.measured_diameter(t) == analytic.flat_mesh_diameter(n)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("name", ["ring_mesh", "flat_mesh"])
+def test_channel_dependency_acyclic(name, n):
+    # Dally-Seitz deadlock freedom via the up/down VC phase discipline
+    t = topology.build(name, n)
+    assert t.check_deadlock_free()
+
+
+def test_component_counts_match_paper():
+    # §3: "to support 256 cores, we need 16 modified mesh router and 64
+    # ringlets"; §7.1.1: 1024 PEs -> 64 routers, 256 ringlets.
+    t = topology.build_ring_mesh(256)
+    assert t.n_routers == 16 and t.n_ringlets == 64
+    t = topology.build_ring_mesh(1024)
+    assert t.n_routers == 64 and t.n_ringlets == 256
+
+
+def test_ring_hops_bounded_by_two():
+    # §6.1: inside a bidirectional 4-PE ringlet any node is <= 2 ring hops
+    t = topology.build_ring_mesh(16)
+    for ringlet in range(4):
+        base = ringlet * 4
+        for i in range(4):
+            for j in range(4):
+                if i == j:
+                    continue
+                hops = t.hops(base + i, base + j)
+                assert 1 <= hops <= 2
+
+
+def test_block_transaction_within_12_cycles():
+    # §4.2: a transaction on a fabric block takes <= 12 cycles; one-way
+    # worst case inside a block is 2 (ring) + 1 (rs->router) + 1 (router->rs)
+    # + 2 (ring) = 6 network hops.
+    t = topology.build_ring_mesh(16)
+    worst = max(t.hops(s, d) for s in range(16) for d in range(16) if s != d)
+    assert worst <= 6
+
+
+def test_mesh_bisection_links_match_formula():
+    for n in (64, 256, 1024):
+        t = topology.build_ring_mesh(n)
+        # one direction of the cut: min(N_R, N_C) physical channels... the
+        # paper counts min(bx, by) links * b_l (§6.2)
+        assert analytic.mesh_cut_links(t) == analytic.ring_mesh_bisection(n)
+
+
+def test_vc_phase_structure():
+    t = topology.build_ring_mesh(64)
+    # RS2R queues only ever receive up-phase, R2RS only down-phase routing
+    for q in range(t.n_links):
+        for d in range(t.n_pes):
+            nxt = t.route_table[q, d]
+            if nxt < 0:
+                continue
+            # entering a ring from the router must be the VC1 (down) queue
+            if t.link_kind[q] == topology.R2RS and \
+                    t.link_kind[nxt] == topology.RING:
+                assert t.link_vc[nxt] == 1
+            # fresh PE injections enter the ring on VC0 (up) unless ejecting
+            if t.link_kind[q] == topology.PE_SRC and \
+                    t.link_kind[nxt] == topology.RING:
+                assert t.link_vc[nxt] == 0
+
+
+def test_route_tables_deterministic():
+    a = topology.build_ring_mesh(64)
+    b = topology.build_ring_mesh(64)
+    assert np.array_equal(a.route_table, b.route_table)
