@@ -1,0 +1,18 @@
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: collect test test-dist dryrun-smoke
+
+# Fast regression gate: every test module must import (a missing module
+# fails here in ~1s instead of minutes into the full suite).
+collect:
+	$(PY) -m pytest --collect-only -q
+
+test: collect
+	$(PY) -m pytest -x -q
+
+test-dist:
+	$(PY) -m pytest -q tests/test_dist.py tests/test_sharding_spec.py
+
+dryrun-smoke:
+	$(PY) -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single --out /tmp/repro_dryrun --force

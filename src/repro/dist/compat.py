@@ -1,0 +1,100 @@
+"""Version shims for the pinned jax in this container.
+
+The codebase (and its tests) target the current jax API surface:
+
+* ``jax.make_mesh(shape, names, axis_types=...)``
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+* ``jax.sharding.AxisType``
+
+Older jaxlib builds (<= 0.4.x) lack these; ``ensure()`` backfills each one
+from its stable predecessor (``jax.experimental.shard_map``, positional
+``make_mesh``) — and is a no-op where jax already provides them, so the
+code keeps working unchanged after an upgrade.  ``shard_map``/``axis_size``
+are also exported here so repro code does not need to care which spelling
+the installed jax has.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+_done = False
+
+
+def ensure() -> None:
+    """Idempotently backfill missing jax APIs (see module docstring)."""
+    global _done
+    if _done:
+        return
+    _done = True
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # pre-AxisType jax: every axis is Auto
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # Old jax returns cost_analysis() as a one-element list of dicts;
+    # current jax returns the dict itself (what the codebase expects).
+    from jax._src import stages as _stages
+    _orig_cost = _stages.Compiled.cost_analysis
+    if not getattr(_orig_cost, "_repro_unwrapped", False):
+        @functools.wraps(_orig_cost)
+        def cost_analysis(self):
+            out = _orig_cost(self)
+            if isinstance(out, list):
+                return out[0] if out else None
+            return out
+
+        cost_analysis._repro_unwrapped = True
+        _stages.Compiled.cost_analysis = cost_analysis
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, check_rep=None, **kwargs):
+            check = check_rep if check_rep is not None else check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs,
+                              check_rep=bool(check) if check is not None
+                              else True, **kwargs)
+
+        jax.shard_map = shard_map
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off (our collective
+    bodies use psum_scatter/ppermute patterns the checker rejects)."""
+    ensure()
+    try:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:  # newest jax: check_vma renamed/removed
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+
+
+def axis_size(name: str) -> int:
+    """Static size of a named mapped axis (inside shard_map bodies)."""
+    try:
+        return int(jax.lax.axis_size(name))
+    except AttributeError:
+        from jax import core
+        return int(core.axis_frame(name))

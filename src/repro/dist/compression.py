@@ -1,0 +1,60 @@
+"""Gradient compression: int8 per-tensor quantization + error feedback.
+
+The pod-boundary hop is the scarce resource (DESIGN.md §9); int8 cuts its
+bytes 4x versus f32.  Per-tensor symmetric scaling keeps the codec a
+single multiply; the error-feedback accumulator (``quantize_with_feedback``)
+carries the rounding residual into the next step so the *long-run mean*
+of the compressed stream is unbiased — the standard EF-SGD trick.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def quantize(x) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.
+
+    Returns ``(q, scale)`` with ``q`` int8 in [-127, 127] and ``scale`` a
+    float32 scalar such that ``q * scale ~= x`` (error <= scale/2).  An
+    all-zero input maps to scale 1.0 (exact roundtrip, no 0/0).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / _QMAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_with_feedback(x, residual) -> tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+    """Quantize ``x + residual``; return ``(q, scale, new_residual)``.
+
+    ``new_residual`` is the rounding error left behind — feed it back into
+    the next call so quantization noise accumulates to zero instead of
+    biasing the optimizer.
+    """
+    y = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    q, scale = quantize(y)
+    return q, scale, y - dequantize(q, scale)
+
+
+def compressed_psum(x, axis_name: str) -> jax.Array:
+    """All-reduce over ``axis_name`` with int8 payloads.
+
+    Each participant quantizes locally, the int8 codes and scalar scales
+    are all-gathered over the axis (1/4 the wire bytes of an f32
+    all-reduce — int8 cannot be summed on the wire without overflow), and
+    every participant dequantizes and sums locally.  Returns float32.
+    """
+    q, scale = quantize(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (n, ...)
+    sg = jax.lax.all_gather(scale, axis_name)      # (n,)
+    sg = sg.reshape((-1,) + (1,) * x.ndim)
+    return jnp.sum(qg.astype(jnp.float32) * sg, axis=0)

@@ -1,0 +1,176 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style, shape-checked).
+
+Every parameter carries logical axis names in its ``ParamMeta``
+(``models.layers``); this module turns them into ``PartitionSpec``s against
+a concrete mesh.  The production meshes are ``("data", "model")`` and
+``("pod", "data", "model")``:
+
+* FSDP: the ``embed`` dimension of every weight shards over the batch axes
+  (``pod`` x ``data``) — ZeRO-3, since optimizer states mirror params.
+* Tensor parallel: ``heads`` / ``kv_heads`` / ``ff`` / ``inner`` /
+  ``experts`` / ``vocab`` shard over ``model`` (Megatron split; experts
+  over ``model`` = expert parallelism).
+* ``layers`` (the stage-scan axis) and MoE ``expert_ff`` stay replicated.
+
+**Divisibility fallback** (``fit_spec``): a mesh axis is only applied to a
+tensor dimension when the dimension size divides evenly; otherwise the
+axis is dropped (longest valid prefix for grouped axes) and the dimension
+falls back toward replication.  A mesh axis is also never used twice in
+one spec.  This is what keeps one rule set valid across the whole model
+zoo — 6-head decode tensors on an 8-wide ``model`` axis simply replicate
+(and the sequence dimension shards instead; see ``decode_attn``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import context
+
+# logical axis -> candidate mesh axes (applied in order, longest valid
+# prefix wins — see fit_spec)
+DEFAULT_RULES: dict[Optional[str], tuple[str, ...]] = {
+    "embed": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "inner": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_ff": (),
+    "layers": (),
+    None: (),
+}
+
+
+def _entry(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Clamp ``spec`` to ``shape`` on ``mesh`` (divisibility fallback).
+
+    Returns a full-rank spec (one entry per dimension).  Per dimension the
+    requested mesh axes are applied left-to-right while the running
+    product still divides the dimension size; axes that are absent from
+    the mesh, already used by an earlier dimension, or break divisibility
+    are dropped (dropping mid-group stops the group — a partial shard of
+    a *later* axis alone would permute data, not restrict it).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used: set[str] = set()
+    out = []
+    for dim, entry in zip(shape, entries):
+        axes = entry if isinstance(entry, tuple) else \
+            (() if entry is None else (entry,))
+        kept: list[str] = []
+        prod = 1
+        for a in axes:
+            if a not in mesh.axis_names or a in used:
+                continue
+            n = int(mesh.shape[a])
+            if dim % (prod * n) != 0:
+                break
+            kept.append(a)
+            prod *= n
+        used.update(kept)
+        out.append(_entry(tuple(kept)))
+    return P(*out)
+
+
+def spec_for_axes(axes: tuple[Optional[str], ...], mesh, *,
+                  shape: Optional[tuple[int, ...]] = None,
+                  rules: Optional[dict] = None) -> P:
+    """PartitionSpec for one tensor from its logical axis names.
+
+    With ``shape`` the spec is additionally clamped by ``fit_spec``;
+    without it only mesh-membership and axis-reuse are enforced.
+    """
+    table = dict(DEFAULT_RULES)
+    if rules:
+        table.update(rules)
+    raw = [tuple(table.get(name, ())) for name in axes]
+    if shape is not None:
+        return fit_spec(P(*[_entry(r) for r in raw]), tuple(shape), mesh)
+    used: set[str] = set()
+    out = []
+    for r in raw:
+        kept = tuple(a for a in r if a in mesh.axis_names and a not in used)
+        used.update(kept)
+        out.append(_entry(kept))
+    return P(*out)
+
+
+def batch_entry(mesh, b: int):
+    """Spec entry for a batch of ``b``: the longest prefix of the batch
+    axes whose product divides ``b`` — ``("pod", "data")`` / ``"data"`` /
+    ``None``."""
+    kept: list[str] = []
+    prod = 1
+    for a in context.data_axes(mesh):
+        n = int(mesh.shape[a])
+        if b % (prod * n) != 0:
+            break
+        kept.append(a)
+        prod *= n
+    return _entry(tuple(kept))
+
+
+def batch_spec(mesh) -> P:
+    """Spec for the leading (global batch) dimension: all batch axes
+    grouped, e.g. ``P(("pod", "data"))`` — or ``P()`` on a mesh with no
+    batch axes (single-device fallback)."""
+    baxes = context.data_axes(mesh)
+    return P(_entry(baxes)) if baxes else P()
+
+
+def param_specs(cfg, mesh, rules: Optional[dict] = None) -> Any:
+    """PartitionSpec pytree mirroring ``models.model_meta(cfg)``."""
+    from repro.models import layers as L
+    from repro.models import model as M
+    return L.tree_map_meta(
+        lambda m: spec_for_axes(m.axes, mesh, shape=m.shape, rules=rules),
+        M.model_meta(cfg))
+
+
+def param_shardings(cfg, mesh, rules: Optional[dict] = None) -> Any:
+    """NamedSharding pytree mirroring the parameter pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, rules))
+
+
+def cache_specs(cfg, mesh, batch: int, seq_len: int, *,
+                seq_shard: bool = False) -> Any:
+    """PartitionSpec pytree mirroring ``models.init_cache``.
+
+    KV caches (reps, B, Hkv, S, hd) shard batch over the batch axes and —
+    by default — heads over ``model``.  With ``seq_shard=True`` the cache
+    *sequence* shards over ``model`` instead (the long-context decode
+    layout consumed by ``decode_attn.seq_sharded_attention``).  Mamba
+    states shard their channel/head dimension over ``model``.  Every spec
+    passes through ``fit_spec``, so indivisible dims fall back to
+    replication.
+    """
+    from repro.models import model as M
+    ab = M.init_cache(cfg, batch, seq_len, abstract=True)
+    b = _entry(context.data_axes(mesh))
+
+    def one(path, leaf) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        shape = tuple(leaf.shape)
+        if name in ("k", "v"):
+            spec = P(None, b, None, "model", None) if seq_shard \
+                else P(None, b, "model", None, None)
+        elif name == "ssm":
+            spec = P(None, b, "model", None, None)
+        elif name in ("conv_x", "conv_b", "conv_c"):
+            spec = P(None, b, None, "model")
+        else:
+            spec = P(None, b)
+        return fit_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, ab)

@@ -1,0 +1,93 @@
+"""Minimal deterministic stand-in for `hypothesis` (used only when the
+real package is not installed — see conftest.py).
+
+Implements the slice of the API the test suite uses: ``@given`` with
+keyword or positional strategies, ``@settings(max_examples=, deadline=)``,
+and the ``integers / booleans / floats / sampled_from / lists / tuples``
+strategies.  Examples are drawn from a fixed-seed RNG, so runs are
+reproducible; shrinking and the example database are (intentionally) not
+implemented.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(options) -> Strategy:
+    options = list(options)
+    return Strategy(lambda rng: rng.choice(options))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            rng = random.Random(f"stub:{fn.__module__}.{fn.__qualname__}")
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                drawn_args = tuple(s.example(rng) for s in arg_strategies)
+                drawn_kw = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                try:
+                    fn(*drawn_args, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"args={drawn_args} kwargs={drawn_kw}") from e
+        # pytest must see a zero-arg signature (the drawn params are not
+        # fixtures); functools.wraps' __wrapped__ would leak the original
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        # an inner @settings already set _max_examples (copied here by
+        # functools.wraps) — keep it
+        wrapper._max_examples = getattr(fn, "_max_examples",
+                                        DEFAULT_MAX_EXAMPLES)
+        # plugins (e.g. anyio) introspect fn.hypothesis.inner_test
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco

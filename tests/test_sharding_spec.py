@@ -1,0 +1,167 @@
+"""Sharding-rule unit tests: `fit_spec` edge cases and the single-device
+fallback contract (DESIGN.md §9) — beyond what test_dist.py covers.
+
+`fit_spec` only reads `mesh.axis_names` / `mesh.shape`, so these tests run
+against a lightweight mesh stand-in and need no forced devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import context, sharding
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(pod=2, data=4, model=8)
+
+
+# ---------------------------------------------------------------------------
+# fit_spec
+# ---------------------------------------------------------------------------
+def test_indivisible_axis_falls_back_to_replicated():
+    # 6 heads on an 8-wide model axis -> replicate, don't error
+    assert sharding.fit_spec(P(None, "model", None), (2, 6, 32), MESH) \
+        == P(None, None, None)
+
+
+def test_divisible_axis_is_kept():
+    assert sharding.fit_spec(P(None, "model", None), (2, 16, 32), MESH) \
+        == P(None, "model", None)
+
+
+def test_grouped_axes_keep_longest_valid_prefix():
+    # 16 % (pod*data)=8 == 0 -> keep both; 6 % 2 == 0 but 6 % 8 != 0 ->
+    # keep only the pod prefix; 3 divides neither -> fully replicated
+    assert sharding.fit_spec(P(("pod", "data")), (16,), MESH) \
+        == P(("pod", "data"))
+    assert sharding.fit_spec(P(("pod", "data")), (6,), MESH) == P("pod")
+    assert sharding.fit_spec(P(("pod", "data")), (3,), MESH) == P(None)
+
+
+def test_prefix_stops_at_first_failing_axis():
+    # dropping a mid-group axis must stop the group: with ("data", "pod")
+    # over dim 2, data(4) fails, and pod must NOT be picked up instead
+    assert sharding.fit_spec(P(("data", "pod")), (2,), MESH) == P(None)
+
+
+def test_axes_absent_from_mesh_are_dropped():
+    mesh = FakeMesh(data=4)
+    assert sharding.fit_spec(P("model", "data"), (8, 8), mesh) \
+        == P(None, "data")
+
+
+def test_axis_never_reused_across_dims():
+    spec = sharding.fit_spec(P("model", "model"), (8, 8), MESH)
+    assert spec == P("model", None)
+
+
+def test_short_spec_padded_to_full_rank():
+    spec = sharding.fit_spec(P("model"), (8, 4, 2), MESH)
+    assert len(spec) == 3
+    assert spec == P("model", None, None)
+
+
+def test_size_one_dims_replicate():
+    assert sharding.fit_spec(P(("pod", "data"), "model"), (1, 1), MESH) \
+        == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# spec_for_axes / batch_spec / cache_specs
+# ---------------------------------------------------------------------------
+def test_spec_for_axes_applies_rules_and_shape():
+    spec = sharding.spec_for_axes(("embed", "heads", None), MESH,
+                                  shape=(64, 16, 7))
+    assert spec == P(("pod", "data"), "model", None)
+    # custom rules override the defaults
+    spec = sharding.spec_for_axes(("embed",), MESH, shape=(64,),
+                                  rules={"embed": ("model",)})
+    assert spec == P("model")
+
+
+def test_batch_spec_groups_batch_axes():
+    assert sharding.batch_spec(MESH) == P(("pod", "data"))
+    assert sharding.batch_spec(FakeMesh(data=4, model=8)) == P("data")
+    assert sharding.batch_spec(FakeMesh(model=8)) == P()
+
+
+def test_cache_specs_seq_shard_switch():
+    from repro import configs
+    from repro.models import smoke_config
+    cfg = smoke_config(configs.get("qwen2-7b"))
+    mesh = FakeMesh(data=2, model=2)
+    head = sharding.cache_specs(cfg, mesh, batch=4, seq_len=32)
+    seq = sharding.cache_specs(cfg, mesh, batch=4, seq_len=32,
+                               seq_shard=True)
+    k_head = head[0]["0"]["self"]["k"]
+    k_seq = seq[0]["0"]["self"]["k"]
+    assert k_head == P(None, "data", "model", None, None)
+    assert k_seq == P(None, "data", None, "model", None)
+    # indivisible batch replicates instead of erroring
+    odd = sharding.cache_specs(cfg, mesh, batch=3, seq_len=32)
+    assert odd[0]["0"]["self"]["k"][1] is None
+
+
+# ---------------------------------------------------------------------------
+# single-device fallback (no ambient mesh)
+# ---------------------------------------------------------------------------
+def test_context_nesting_and_suspend():
+    assert context.current_mesh() is None
+    with context.use_mesh(MESH):
+        assert context.current_mesh() is MESH
+        assert context.data_axes() == ("pod", "data")
+        with context.suspend_mesh():
+            assert context.current_mesh() is None
+            assert context.data_axes() == ()
+        assert context.current_mesh() is MESH
+    assert context.current_mesh() is None
+
+
+def test_constrain_is_identity_without_mesh():
+    from repro import configs
+    from repro.models import layers as L
+    from repro.models import model as M
+    from repro.models import smoke_config
+    cfg = smoke_config(configs.get("qwen2-7b"))
+    x = jnp.ones((2, 8, cfg.d_model))
+    assert L.constrain_btd(cfg, x) is x
+    assert L.constrain_inner(x, 2) is x
+    assert M.constrain_activation(cfg, x) is x
+
+
+def test_seq_sharded_attention_falls_back_to_ref():
+    from repro.dist import decode_attn
+    from repro.kernels import ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 1, 16))
+    k = jax.random.normal(ks[1], (1, 2, 24, 16))
+    v = jax.random.normal(ks[2], (1, 2, 24, 16))
+    assert context.current_mesh() is None
+    out = decode_attn.seq_sharded_attention(q, k, v, causal=True,
+                                            window=8, q_offset=20)
+    want = ref.attention_ref(q, k, v, causal=True, window=8, q_offset=20)
+    np.testing.assert_allclose(out, want, atol=1e-6)
+
+
+def test_dp_grad_fn_falls_back_without_batch_axes():
+    from repro.dist import data_parallel
+    mesh = jax.make_mesh((1,), ("model",))
+
+    def loss_fn(params, batch):
+        loss = jnp.mean((params["w"] * batch["x"]) ** 2)
+        return loss, {}
+
+    fn = data_parallel.make_dp_grad_fn(loss_fn, mesh)
+    params = {"w": jnp.arange(4.0)}
+    batch = {"x": jnp.ones((4,))}
+    loss, grads = fn(params, batch)
+    (want_l, _), want_g = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch)
+    assert loss == pytest.approx(float(want_l))
+    np.testing.assert_allclose(grads["w"], want_g["w"], rtol=1e-6)
