@@ -1,12 +1,20 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: collect test test-dist dryrun-smoke
+.PHONY: collect test test-dist dryrun-smoke bench-quick
 
 # Fast regression gate: every test module must import (a missing module
-# fails here in ~1s instead of minutes into the full suite).
+# fails here in ~1s instead of minutes into the full suite), and the
+# benchmark harness must import so bench regressions fail fast too.
 collect:
 	$(PY) -m pytest --collect-only -q
+	$(PY) -c "import benchmarks.run, benchmarks.noc_tables, \
+	          benchmarks.serial_baseline, benchmarks.kernel_micro"
+
+# CI-sized benchmark: small sweep grids + the sweep-equivalence tests.
+bench-quick:
+	$(PY) -m benchmarks.run --quick --terse --no-baseline
+	$(PY) -m pytest -q tests/test_sweep.py
 
 test: collect
 	$(PY) -m pytest -x -q

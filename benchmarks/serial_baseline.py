@@ -1,0 +1,665 @@
+"""Frozen seed reference: the serial per-point NoC evaluation path.
+
+This module is a *pinned copy* of the PR-3 ("seed") simulator and topology
+builders, kept verbatim so ``benchmarks/run.py`` can measure the batched
+sweep engine (``core.sweep``) against a fixed baseline across PRs:
+
+* per-point ``jax.jit`` dispatch of the seed ``_run`` (static
+  ``uniform_pattern`` flag -> one recompilation per pattern mode),
+* two fixed 12-iteration arbitration scans (``_rearb`` + ``_prune``),
+* int32 route/queue arrays, per-cycle PRNG splits,
+* per-entry python route-table construction, rebuilt for every sweep
+  point (the seed ``benchmarks.noc_tables._sim`` behaviour).
+
+Do not modernize this file; it is the measuring stick, not the product.
+``figs15_17_serial`` reproduces the seed's scalability loop exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packet as pk
+from repro.core import topology as topo_mod
+from repro.core.topology import Topology  # data container only
+
+# ---------------------------------------------------------------------------
+# Vendored seed constants + builder helpers: the live repro.core.topology
+# may be refactored freely without moving this measuring stick.
+# ---------------------------------------------------------------------------
+PE_SRC = 0
+EJECT = 1
+RING = 2
+RS2R = 3
+R2RS = 4
+MESH = 5
+KIND_PRIORITY = {PE_SRC: 1, EJECT: 0, RING: 3, RS2R: 3, R2RS: 2, MESH: 2}
+INVALID = -1
+RING_MESH_GRIDS = {16: (1, 1), 32: (2, 1), 64: (2, 2), 128: (4, 2),
+                   256: (4, 4), 512: (8, 4), 1024: (8, 8)}
+FLAT_MESH_GRIDS = {16: (4, 4), 32: (8, 4), 64: (8, 8), 128: (16, 8),
+                   256: (16, 16), 512: (32, 16), 1024: (32, 32)}
+
+
+class _Builder:
+    """Seed queue accumulator; two VCs share one physical channel id."""
+
+    def __init__(self):
+        self.kind: list[int] = []
+        self.vc: list[int] = []
+        self.phys: list[int] = []
+        self.src: list[int] = []
+        self.dst: list[int] = []
+        self.cap: list[int] = []
+        self._n_phys = 0
+
+    def add(self, kind: int, src: int, dst: int, cap: int,
+            n_vcs: int = 1) -> tuple[int, ...]:
+        phys = self._n_phys
+        self._n_phys += 1
+        ids = []
+        for vc in range(n_vcs):
+            self.kind.append(kind)
+            self.vc.append(vc)
+            self.phys.append(phys)
+            self.src.append(src)
+            self.dst.append(dst)
+            self.cap.append(cap)
+            ids.append(len(self.kind) - 1)
+        return tuple(ids)
+
+
+def _ring_dir(i: int, j: int) -> int:
+    """Shortest direction on a 4-node ring (CW on tie, seed semantics)."""
+    cw = (j - i) % pk.PES_PER_RINGLET
+    ccw = (i - j) % pk.PES_PER_RINGLET
+    return 1 if cw <= ccw else -1
+
+
+
+
+
+
+UNIFORM = "uniform"
+BIT_REVERSAL = "bit_reversal"
+TRANSPOSE = "transpose"
+PATTERNS = (UNIFORM, BIT_REVERSAL, TRANSPOSE)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    cycles: int = 2000
+    warmup: int = 500
+    inj_rate: float = 0.25
+    pattern: str = UNIFORM
+    locality_ringlet: float = 0.0
+    locality_block: float = 0.0
+    seed: int = 0
+    starvation_limit: int = 8
+
+    def __post_init__(self):
+        if self.pattern not in PATTERNS:
+            raise ValueError(f"unknown pattern {self.pattern!r}")
+        if not 0 <= self.locality_ringlet + self.locality_block <= 1:
+            raise ValueError("locality fractions must sum to <= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    topology: str
+    n_pes: int
+    cfg: SimConfig
+    delivered: int
+    offered: int
+    accepted: int
+    dropped: int
+    lost: int        # exactness-guard counter; 0 in all validated runs
+    in_flight: int   # flits still queued at the end (conservation checks)
+    measured_cycles: int
+    avg_latency: float          # generation -> ejection, cycles
+    throughput: float           # delivered packets / cycle
+    flit_hops_per_cycle: float  # link traversals / cycle (activity factor)
+    per_pe_throughput: float
+
+    def row(self) -> dict:
+        return {
+            "topology": self.topology, "n_pes": self.n_pes,
+            "pattern": self.cfg.pattern, "inj_rate": self.cfg.inj_rate,
+            "avg_latency": round(self.avg_latency, 2),
+            "throughput": round(self.throughput, 3),
+            "per_pe_throughput": round(self.per_pe_throughput, 4),
+            "flit_hops_per_cycle": round(self.flit_hops_per_cycle, 3),
+            "delivered": self.delivered, "offered": self.offered,
+            "dropped": self.dropped,
+        }
+
+
+def pattern_destinations(pattern: str, n_pes: int) -> Optional[np.ndarray]:
+    """Fixed destination permutation, or None for uniform-random."""
+    if pattern == UNIFORM:
+        return None
+    bits = int(np.log2(n_pes))
+    assert (1 << bits) == n_pes, "pattern sizes must be powers of two"
+    src = np.arange(n_pes)
+    if pattern == BIT_REVERSAL:
+        return pk.bitreverse(src, bits).astype(np.int32)
+    if pattern == TRANSPOSE:
+        return pk.transpose_perm(src, bits).astype(np.int32)
+    raise ValueError(pattern)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_links", "n_phys", "n_pes", "depth", "cycles",
+                     "warmup", "starvation_limit", "uniform_pattern"),
+)
+def _run(route, kind, prio, cap, phys, pe_src_link, is_sink, perm_dst,
+         *, n_links, n_phys, n_pes, depth, cycles, warmup, starvation_limit,
+         inj_rate, loc_ring, loc_block, seed, uniform_pattern):
+    L, P, K = n_links, n_pes, depth
+    LD = L  # dummy row index (queues have L+1 rows; row L is scratch)
+    PD = n_phys  # dummy arbitration segment
+    link_ids = jnp.arange(L + 1, dtype=jnp.int32)
+    pow2 = 1 << int(np.ceil(np.log2(L + 1)))
+
+    route = jnp.concatenate([route, jnp.full((1, P), -1, jnp.int32)], axis=0)
+    kind = jnp.concatenate([kind.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    prio = jnp.concatenate([prio, jnp.zeros((1,), jnp.int32)])
+    cap = jnp.concatenate([cap, jnp.full((1,), 1 << 30, jnp.int32)])
+    phys = jnp.concatenate([phys, jnp.full((1,), PD, jnp.int32)])
+    is_sink = jnp.concatenate([is_sink, jnp.zeros((1,), bool)])
+
+    q_dst0 = jnp.full((L + 1, K), -1, jnp.int32)
+    q_born0 = jnp.zeros((L + 1, K), jnp.int32)
+    q_len0 = jnp.zeros((L + 1,), jnp.int32)
+    wait0 = jnp.zeros((L + 1,), jnp.int32)
+    key0 = jax.random.PRNGKey(seed)
+    metrics0 = dict(
+        delivered=jnp.int32(0), offered=jnp.int32(0), accepted=jnp.int32(0),
+        dropped=jnp.int32(0), lat_sum=jnp.float32(0.0), moved=jnp.float32(0.0),
+        lost=jnp.int32(0),
+        wins_by_kind=jnp.zeros((8,), jnp.int32),
+        stall_next_kind=jnp.zeros((8,), jnp.int32),
+    )
+
+    pes = jnp.arange(P, dtype=jnp.int32)
+
+    def step(carry, cycle):
+        q_dst, q_born, q_len, wait, key, m = carry
+        measure = cycle >= warmup
+
+        # --- 1. routing: next link for every queue head --------------------
+        head_dst = q_dst[:, 0]
+        head_born = q_born[:, 0]
+        valid = q_len > 0
+        nxt = jnp.take_along_axis(
+            route, jnp.clip(head_dst, 0, P - 1)[:, None], axis=1)[:, 0]
+        nxt = jnp.where(valid, nxt, -1)
+        nxt_c = jnp.clip(nxt, 0, L)
+
+        # Switched-off routes (INVALID) drop the flit — paper §5.1.
+        drop_route = valid & (nxt < 0) & valid
+
+        # --- 2. arbitration over each output link ---------------------------
+        # Optimistic winner selection (ignores space), then iterative
+        # feasibility pruning: a winner keeps its grant iff its target queue
+        # has a free slot *after this cycle's departures*.  A completely
+        # full cycle of queues whose heads all chase each other therefore
+        # advances in lockstep (slotted-ring semantics) instead of
+        # deadlocking, while chains blocked on a stalled head prune
+        # backwards — see DESIGN.md §4.
+        contend = valid & (nxt >= 0)
+        # Weighted round-robin (§4.2): in-ring traffic leads by a small
+        # static margin; waiting inputs age upward so no port starves (the
+        # paper's "after a fixed amount of elapsed cycles" rule).
+        eff_prio = prio * 2 + jnp.minimum(wait, starvation_limit)
+        rot = (link_ids + cycle) & (pow2 - 1)            # unique RR tiebreak
+        score = eff_prio * pow2 + rot
+
+        def _select(active):
+            # One grant per *physical* channel per cycle; the two VC queues
+            # of a channel are separate contenders and separate targets.
+            seg = jnp.where(active, phys[nxt_c], PD).astype(jnp.int32)
+            best = jax.ops.segment_max(score, seg, num_segments=n_phys + 1)
+            return active & (score == best[seg])
+
+        # Grant-and-re-arbitrate fixpoint.  A grant into a full queue is only
+        # feasible if that queue's own head departs this cycle (lockstep /
+        # slotted-ring semantics: completely full cycles of queues rotate).
+        # Infeasible grantees are removed from the candidate set and the
+        # output is re-arbitrated, so an aged high-priority head stuck on a
+        # frozen queue cannot shadow a feasible lower-priority contender
+        # (priority inversion would otherwise hard-deadlock the hierarchy).
+        def _rearb(active, _):
+            w = _select(active)
+            feasible = (q_len[nxt_c] - w[nxt_c].astype(jnp.int32)) < cap[nxt_c]
+            return active & ~(w & ~feasible), None
+
+        active, _ = jax.lax.scan(_rearb, contend, None, length=12)
+        winner = _select(active)
+
+        def _prune(w, _):
+            feasible = (q_len[nxt_c] - w[nxt_c].astype(jnp.int32)) < cap[nxt_c]
+            return w & feasible, None
+
+        winner, _ = jax.lax.scan(_prune, winner, None, length=12)
+        # Monotone pruning converges for dependency chains up to the
+        # iteration count; any residue is counted (and not moved) so the
+        # conservation property stays exact.
+        residue = winner & ~((q_len[nxt_c] - winner[nxt_c].astype(jnp.int32))
+                             < cap[nxt_c])
+        winner = winner & ~residue
+
+        deq = winner | drop_route
+        sink = is_sink[nxt_c]
+        enq = winner & ~sink
+
+        # --- 3. apply moves --------------------------------------------------
+        q_dst = jnp.where(deq[:, None],
+                          jnp.concatenate([q_dst[:, 1:],
+                                           jnp.full((L + 1, 1), -1, jnp.int32)], 1),
+                          q_dst)
+        q_born = jnp.where(deq[:, None],
+                           jnp.concatenate([q_born[:, 1:],
+                                            jnp.zeros((L + 1, 1), jnp.int32)], 1),
+                           q_born)
+        q_len = q_len - deq.astype(jnp.int32)
+
+        # Exactness guard: second-order effects of residue removal could
+        # leave a grant whose target is still full; such moves become
+        # counted drops rather than corrupting queue state (kept 0 by the
+        # prune loop in practice — asserted by the conservation tests).
+        lost_enq = enq & (q_len[nxt_c] >= cap[nxt_c])
+        enq = enq & ~lost_enq
+
+        tgt = jnp.where(enq, nxt_c, LD)
+        pos = jnp.clip(q_len[tgt], 0, K - 1)
+        q_dst = q_dst.at[tgt, pos].set(jnp.where(enq, head_dst, -1))
+        q_born = q_born.at[tgt, pos].set(jnp.where(enq, head_born, 0))
+        q_len = q_len.at[tgt].add(enq.astype(jnp.int32))
+
+        deliver = winner & sink
+        delivered_c = jnp.sum(deliver.astype(jnp.int32))
+        lat_c = jnp.sum(jnp.where(deliver, (cycle - head_born), 0)
+                        .astype(jnp.float32))
+        moved_c = jnp.sum(winner.astype(jnp.float32))
+        wait = jnp.where(valid & ~deq, wait + 1, 0)
+
+        # --- 4. injection -----------------------------------------------------
+        key, k_inj, k_dst, k_loc, k_ring, k_blk = jax.random.split(key, 6)
+        inj = jax.random.bernoulli(k_inj, inj_rate, (P,))
+        if uniform_pattern:
+            off = jax.random.randint(k_dst, (P,), 1, P, dtype=jnp.int32)
+            base_dst = (pes + off) % P  # uniform over everyone else
+        else:
+            base_dst = perm_dst
+        r = jax.random.uniform(k_loc, (P,))
+        ring_base = pes - pes % pk.PES_PER_RINGLET
+        ring_off = jax.random.randint(k_ring, (P,), 1, pk.PES_PER_RINGLET,
+                                      dtype=jnp.int32)
+        ring_peer = ring_base + (pes % pk.PES_PER_RINGLET + ring_off) % pk.PES_PER_RINGLET
+        blk_base = pes - pes % pk.PES_PER_BLOCK
+        blk_off = jax.random.randint(k_blk, (P,), 1, pk.PES_PER_BLOCK,
+                                     dtype=jnp.int32)
+        blk_peer = blk_base + (pes % pk.PES_PER_BLOCK + blk_off) % pk.PES_PER_BLOCK
+        dst = jnp.where(r < loc_ring, ring_peer,
+                        jnp.where(r < loc_ring + loc_block, blk_peer, base_dst))
+
+        src_l = pe_src_link
+        room = q_len[src_l] < cap[src_l]
+        acc = inj & room
+        tgt2 = jnp.where(acc, src_l, LD)
+        pos2 = jnp.clip(q_len[tgt2], 0, K - 1)
+        q_dst = q_dst.at[tgt2, pos2].set(jnp.where(acc, dst, -1))
+        q_born = q_born.at[tgt2, pos2].set(jnp.where(acc, cycle, 0))
+        q_len = q_len.at[tgt2].add(acc.astype(jnp.int32))
+
+        # scrub the scratch row
+        q_len = q_len.at[LD].set(0)
+
+        g = measure.astype(jnp.int32)
+        gf = measure.astype(jnp.float32)
+        m["wins_by_kind"] = m["wins_by_kind"] + g * jax.ops.segment_sum(
+            winner.astype(jnp.int32), kind, num_segments=8)
+        m["stall_next_kind"] = m["stall_next_kind"] + g * jax.ops.segment_sum(
+            (contend & ~winner).astype(jnp.int32),
+            jnp.where(contend & ~winner, kind[nxt_c], 7),
+            num_segments=8)
+        m = dict(
+            wins_by_kind=m["wins_by_kind"],
+            stall_next_kind=m["stall_next_kind"],
+            delivered=m["delivered"] + g * delivered_c,
+            offered=m["offered"] + g * jnp.sum(inj.astype(jnp.int32)),
+            accepted=m["accepted"] + g * jnp.sum(acc.astype(jnp.int32)),
+            dropped=m["dropped"]
+            + g * (jnp.sum((inj & ~room).astype(jnp.int32))
+                   + jnp.sum(drop_route.astype(jnp.int32))
+                   + jnp.sum(lost_enq.astype(jnp.int32))),
+            lost=m["lost"] + jnp.sum(lost_enq.astype(jnp.int32))
+            + jnp.sum(residue.astype(jnp.int32)),
+            lat_sum=m["lat_sum"] + gf * lat_c,
+            moved=m["moved"] + gf * moved_c,
+        )
+        return (q_dst, q_born, q_len, wait, key, m), None
+
+    carry0 = (q_dst0, q_born0, q_len0, wait0, key0, metrics0)
+    (qd, qb, ql, w, k, metrics), _ = jax.lax.scan(
+        step, carry0, jnp.arange(cycles, dtype=jnp.int32))
+    metrics["in_flight"] = jnp.sum(ql)
+    metrics["q_len_by_kind"] = jax.ops.segment_sum(
+        ql[:-1], kind[:-1], num_segments=8)
+    metrics["final_state"] = (qd, qb, ql, w)
+    return metrics
+
+
+def simulate(topo: topo_mod.Topology, cfg: SimConfig) -> SimResult:
+    """Run one simulation; returns steady-state metrics."""
+    perm = pattern_destinations(cfg.pattern, topo.n_pes)
+    uniform = perm is None
+    if perm is None:
+        perm = np.zeros((topo.n_pes,), np.int32)
+    depth = int(topo.link_cap[topo.link_cap < (1 << 29)].max())
+    metrics = _run(
+        jnp.asarray(topo.route_table),
+        jnp.asarray(topo.link_kind),
+        jnp.asarray(topo.link_prio),
+        jnp.asarray(topo.link_cap),
+        jnp.asarray(topo.link_phys),
+        jnp.asarray(topo.pe_src_link),
+        jnp.asarray(topo.is_sink),
+        jnp.asarray(perm),
+        n_links=topo.n_links, n_phys=topo.n_phys, n_pes=topo.n_pes,
+        depth=depth,
+        cycles=cfg.cycles, warmup=cfg.warmup,
+        starvation_limit=cfg.starvation_limit,
+        inj_rate=cfg.inj_rate, loc_ring=cfg.locality_ringlet,
+        loc_block=cfg.locality_block, seed=cfg.seed,
+        uniform_pattern=uniform,
+    )
+    metrics = dict(metrics)
+    for k in ("q_len_by_kind", "wins_by_kind", "stall_next_kind",
+              "final_state"):
+        metrics.pop(k, None)
+    metrics = jax.tree.map(lambda x: np.asarray(x).item(), metrics)
+    mc = cfg.cycles - cfg.warmup
+    delivered = int(metrics["delivered"])
+    return SimResult(
+        topology=topo.name, n_pes=topo.n_pes, cfg=cfg,
+        delivered=delivered,
+        offered=int(metrics["offered"]),
+        accepted=int(metrics["accepted"]),
+        dropped=int(metrics["dropped"]),
+        lost=int(metrics["lost"]),
+        in_flight=int(metrics["in_flight"]),
+        measured_cycles=mc,
+        avg_latency=metrics["lat_sum"] / max(delivered, 1),
+        throughput=delivered / mc,
+        flit_hops_per_cycle=metrics["moved"] / mc,
+        per_pe_throughput=delivered / mc / topo.n_pes,
+    )
+
+
+# Paper operating regime (§1/§3): "the majority of the traffic remains
+# restricted to the rings". Used by the figure-reproduction benchmarks.
+PAPER_LOCALITY = dict(locality_ringlet=0.75, locality_block=0.20)
+
+def build_ring_mesh(n_pes: int, queue_depth: int = 2,
+                    src_queue_depth: int = 4) -> Topology:
+    """The paper's ring-mesh: Fig. 1 instantiation for ``n_pes`` PEs."""
+    if n_pes not in RING_MESH_GRIDS:
+        raise ValueError(f"unsupported ring-mesh size {n_pes}")
+    bx, by = RING_MESH_GRIDS[n_pes]
+    n_blocks = bx * by
+    n_ringlets = n_blocks * pk.RINGLETS_PER_BLOCK
+    assert n_blocks * pk.PES_PER_BLOCK == n_pes
+
+    def rs_node(pe: int) -> int:
+        return pe
+
+    def router_node(block: int) -> int:
+        return n_pes + block
+
+    b = _Builder()
+    pe_src = np.zeros(n_pes, np.int32)
+    pe_eject = np.zeros(n_pes, np.int32)
+    ring_cw = np.zeros((n_pes, 2), np.int32)   # [pe, vc] CW queue leaving pe
+    ring_ccw = np.zeros((n_pes, 2), np.int32)
+    rs2r = np.zeros(n_ringlets, np.int32)          # up traffic: VC0 only used
+    r2rs = np.zeros(n_ringlets, np.int32)          # down traffic: VC1 only
+    mesh_q = {}  # (block_a, block_b) -> (vc0 id, vc1 id)
+
+    for pe in range(n_pes):
+        pe_src[pe] = b.add(PE_SRC, -1, rs_node(pe), src_queue_depth)[0]
+        pe_eject[pe] = b.add(EJECT, rs_node(pe), -1, 1 << 30)[0]
+
+    for pe in range(n_pes):
+        base = pe - (pe % pk.PES_PER_RINGLET)
+        nxt = base + (pe + 1) % pk.PES_PER_RINGLET
+        prv = base + (pe - 1) % pk.PES_PER_RINGLET
+        ring_cw[pe] = b.add(RING, rs_node(pe), rs_node(nxt), queue_depth, 2)
+        ring_ccw[pe] = b.add(RING, rs_node(pe), rs_node(prv), queue_depth, 2)
+
+    for ringlet in range(n_ringlets):
+        block = ringlet // pk.RINGLETS_PER_BLOCK
+        master = ringlet * pk.PES_PER_RINGLET  # position 0 is the master RS
+        # The master<->router channels carry a single phase each (up / down),
+        # so one VC buffer suffices on each (the paper's dedicated inject /
+        # eject buffers at the RS-router interface, Fig. 4).
+        rs2r[ringlet] = b.add(RS2R, rs_node(master), router_node(block),
+                              queue_depth)[0]
+        r2rs[ringlet] = b.add(R2RS, router_node(block), rs_node(master),
+                              queue_depth)[0]
+
+    for y in range(by):
+        for x in range(bx):
+            a = y * bx + x
+            for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                nx_, ny_ = x + dx, y + dy
+                if 0 <= nx_ < bx and 0 <= ny_ < by:
+                    c = ny_ * bx + nx_
+                    mesh_q[(a, c)] = b.add(MESH, router_node(a),
+                                           router_node(c), queue_depth, 2)
+
+    n_links = len(b.kind)
+    kind = np.array(b.kind, np.int8)
+
+    # ---- route table ------------------------------------------------------
+    d_pos = np.arange(n_pes) % pk.PES_PER_RINGLET
+    d_ringlet_g = np.arange(n_pes) // pk.PES_PER_RINGLET   # global ringlet id
+    d_block = np.arange(n_pes) // pk.PES_PER_BLOCK
+    d_bx = d_block % bx
+    d_by = d_block // bx
+
+    def mesh_vc(dest: int) -> int:
+        # Load-balance the two mesh VCs by destination-ringlet parity — the
+        # role of the paper's "dst 00/01 -> VC-0" rule (deadlock-safe: XY).
+        return int(d_ringlet_g[dest] % 2)
+
+    def route_at_rs(pe: int, vc_in: int, from_kind: int, dest: int) -> int:
+        """Next queue for a flit at ring switch ``pe`` (phase-aware)."""
+        pos = pe % pk.PES_PER_RINGLET
+        ringlet = pe // pk.PES_PER_RINGLET
+        if dest // pk.PES_PER_RINGLET == ringlet:
+            dpos = int(d_pos[dest])
+            if dpos == pos:
+                return pe_eject[pe]
+            step = _ring_dir(pos, dpos)
+            if from_kind == R2RS:
+                vc_out = 1                      # down phase
+            elif pos == 0 and from_kind == RING:
+                vc_out = 1                      # crossed the dateline (master)
+            elif from_kind == PE_SRC:
+                vc_out = 0                      # fresh injection, up phase
+            else:
+                vc_out = vc_in                  # keep phase inside the ring
+        else:
+            if pos == 0:                        # master: hand to the router
+                return rs2r[ringlet]
+            step = _ring_dir(pos, 0)
+            vc_out = 0                          # up phase toward the master
+        row = ring_cw if step == 1 else ring_ccw
+        return int(row[pe, vc_out])
+
+    def route_at_router(block: int, dest: int) -> int:
+        """XY dimension-order routing at mesh router ``block`` (§4.1)."""
+        x, y = block % bx, block // bx
+        tx, ty = int(d_bx[dest]), int(d_by[dest])
+        if (x, y) == (tx, ty):
+            ringlet = (block * pk.RINGLETS_PER_BLOCK
+                       + int(d_ringlet_g[dest]) % pk.RINGLETS_PER_BLOCK)
+            return int(r2rs[ringlet])
+        if x != tx:
+            step = (1, 0) if tx > x else (-1, 0)
+        else:
+            step = (0, 1) if ty > y else (0, -1)
+        nbr = (y + step[1]) * bx + (x + step[0])
+        return int(mesh_q[(block, nbr)][mesh_vc(dest)])
+
+    route = np.full((n_links, n_pes), INVALID, np.int32)
+    dst_node = np.array(b.dst, np.int32)
+    vc_arr = np.array(b.vc, np.int8)
+    for q in range(n_links):
+        node = dst_node[q]
+        if node < 0:
+            continue
+        if node < n_pes:
+            for dest in range(n_pes):
+                route[q, dest] = route_at_rs(int(node), int(vc_arr[q]),
+                                             int(kind[q]), dest)
+        else:
+            block = int(node - n_pes)
+            for dest in range(n_pes):
+                route[q, dest] = route_at_router(block, dest)
+
+    prio = np.array([KIND_PRIORITY[int(k)] for k in kind], np.int32)
+    return Topology(
+        name=f"ring_mesh_{n_pes}",
+        n_pes=n_pes, blocks_x=bx, blocks_y=by,
+        n_links=n_links, n_phys=b._n_phys,
+        link_kind=kind, link_vc=vc_arr,
+        link_phys=np.array(b.phys, np.int32),
+        link_src_node=np.array(b.src, np.int32),
+        link_dst_node=dst_node,
+        link_prio=prio,
+        link_cap=np.array(b.cap, np.int32),
+        route_table=route,
+        pe_src_link=pe_src,
+        pe_eject_link=pe_eject,
+        n_routers=n_blocks,
+        n_ringlets=n_ringlets,
+    )
+
+
+def build_flat_mesh(n_pes: int, queue_depth: int = 2,
+                    src_queue_depth: int = 4) -> Topology:
+    """Flattened 2D-mesh baseline: one conventional 5-port router per PE,
+    two VCs per input port (Table 1), VC split by destination parity."""
+    if n_pes not in FLAT_MESH_GRIDS:
+        raise ValueError(f"unsupported flat-mesh size {n_pes}")
+    rx, ry = FLAT_MESH_GRIDS[n_pes]
+    assert rx * ry == n_pes
+
+    b = _Builder()
+    pe_src = np.zeros(n_pes, np.int32)
+    pe_eject = np.zeros(n_pes, np.int32)
+    for pe in range(n_pes):
+        pe_src[pe] = b.add(PE_SRC, -1, pe, src_queue_depth)[0]
+        pe_eject[pe] = b.add(EJECT, pe, -1, 1 << 30)[0]
+
+    mesh_q = {}
+    for y in range(ry):
+        for x in range(rx):
+            a = y * rx + x
+            for dx, dy in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                nx_, ny_ = x + dx, y + dy
+                if 0 <= nx_ < rx and 0 <= ny_ < ry:
+                    c = ny_ * rx + nx_
+                    mesh_q[(a, c)] = b.add(MESH, a, c, queue_depth, 2)
+
+    n_links = len(b.kind)
+    kind = np.array(b.kind, np.int8)
+
+    def route_at_router(r: int, dest: int) -> int:
+        x, y = r % rx, r // rx
+        tx, ty = dest % rx, dest // rx
+        if (x, y) == (tx, ty):
+            return int(pe_eject[r])
+        if x != tx:
+            step = (1, 0) if tx > x else (-1, 0)
+        else:
+            step = (0, 1) if ty > y else (0, -1)
+        nbr = (y + step[1]) * rx + (x + step[0])
+        return int(mesh_q[(r, nbr)][dest % 2])
+
+    route = np.full((n_links, n_pes), INVALID, np.int32)
+    dst_node = np.array(b.dst, np.int32)
+    for q in range(n_links):
+        node = dst_node[q]
+        if node < 0:
+            continue
+        for dest in range(n_pes):
+            route[q, dest] = route_at_router(int(node), dest)
+
+    prio = np.array([KIND_PRIORITY[int(k)] for k in kind], np.int32)
+    return Topology(
+        name=f"flat_mesh_{n_pes}",
+        n_pes=n_pes, blocks_x=rx, blocks_y=ry,
+        n_links=n_links, n_phys=b._n_phys,
+        link_kind=kind,
+        link_vc=np.array(b.vc, np.int8),
+        link_phys=np.array(b.phys, np.int32),
+        link_src_node=np.array(b.src, np.int32),
+        link_dst_node=dst_node,
+        link_prio=prio,
+        link_cap=np.array(b.cap, np.int32),
+        route_table=route,
+        pe_src_link=pe_src,
+        pe_eject_link=pe_eject,
+        n_routers=n_pes,
+        n_ringlets=0,
+    )
+
+
+def build_seed(name: str, n_pes: int, **kw) -> Topology:
+    if name in ("ring_mesh", "ringmesh", "proposed"):
+        return build_ring_mesh(n_pes, **kw)
+    if name in ("flat_mesh", "mesh", "2dmesh", "baseline"):
+        return build_flat_mesh(n_pes, **kw)
+    raise ValueError(f"unknown topology {name!r}")
+
+# ---------------------------------------------------------------------------
+# Seed benchmark loop (noc_tables._sim as of PR 3): topology rebuilt per
+# sweep point, one simulate() dispatch per point.
+# ---------------------------------------------------------------------------
+def _sim_seed(topo_name, n, ir, pattern, cycles=1200, warmup=400, seed=1,
+              locality_ringlet=0.75, locality_block=0.20):
+    t = build_seed(topo_name, n, src_queue_depth=8)
+    cfg = SimConfig(cycles=cycles, warmup=warmup, inj_rate=ir,
+                    pattern=pattern, seed=seed,
+                    locality_ringlet=locality_ringlet,
+                    locality_block=locality_block)
+    return simulate(t, cfg)
+
+
+def figs15_17_serial(sizes=(16, 32, 64, 128, 256, 512, 1024), cycles=900):
+    """The seed figs15_17_scalability loop, one point at a time."""
+    rows = []
+    for n in sizes:
+        for topo_name in ("ring_mesh", "flat_mesh"):
+            lats, thrs = [], []
+            for pattern in PATTERNS:
+                r = _sim_seed(topo_name, n, 0.625, pattern, cycles=cycles,
+                              warmup=300)
+                lats.append(r.avg_latency)
+                thrs.append(r.throughput)
+            rows.append({"n_pes": n, "topology": topo_name,
+                         "avg_latency": round(float(np.mean(lats)), 1),
+                         "avg_throughput": round(float(np.mean(thrs)), 1)})
+    return rows

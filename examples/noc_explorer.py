@@ -1,14 +1,17 @@
-"""NoC explorer: the paper's experiment in three acts.
+"""NoC explorer: the paper's experiment in four acts.
 
     PYTHONPATH=src python examples/noc_explorer.py
 
 1. Ring-mesh vs flat 2D-mesh at increasing sizes (latency / throughput /
-   power) under the paper's locality-heavy operating regime.
-2. Saturation sweep: injection rate ramp on a 64-PE ring-mesh.
-3. Morphing: switch a ringlet off with an in-band morph packet, watch the
+   power) under the paper's locality-heavy operating regime — executed as
+   pipelined batched sweeps (``core.sweep``), not point-by-point.
+2. Saturation sweep: injection rate ramp on a 64-PE ring-mesh, the whole
+   ramp as one vmapped device execution.
+3. Adversarial patterns: shuffle / tornado / hotspot on one batch axis.
+4. Morphing: switch a ringlet off with an in-band morph packet, watch the
    traffic drop and the rest of the fabric keep routing; then reset.
 """
-from repro.core import analytic, area, morph, packet, power, sim, topology
+from repro.core import analytic, area, morph, packet, power, sim, sweep, topology
 
 
 def act1_compare(sizes=(16, 64, 256)):
@@ -16,32 +19,47 @@ def act1_compare(sizes=(16, 64, 256)):
           "(Ir=0.625, paper locality) ==")
     print(f"{'PEs':>5} {'topology':>10} {'latency':>8} {'thr':>7} "
           f"{'power(W)':>9} {'LUTs':>8}")
-    for n in sizes:
-        for name in ("ring_mesh", "flat_mesh"):
-            t = topology.build(name, n, src_queue_depth=8)
-            r = sim.simulate(t, sim.SimConfig(
-                cycles=1000, warmup=300, inj_rate=0.625, pattern="uniform",
-                seed=0, **sim.PAPER_LOCALITY))
-            p = power.power(t)
-            a = area.area(t)
-            print(f"{n:>5} {name:>10} {r.avg_latency:>8.1f} "
-                  f"{r.throughput:>7.1f} {p.total_w:>9.2f} {a.lut:>8}")
+    cfg = sim.SimConfig(cycles=1000, warmup=300, inj_rate=0.625,
+                        pattern="uniform", seed=0, **sim.PAPER_LOCALITY)
+    topos = [topology.build(name, n, src_queue_depth=8)
+             for n in sizes for name in ("ring_mesh", "flat_mesh")]
+    results = sweep.sweep_many([(t, [cfg]) for t in topos])
+    for t, (r,) in zip(topos, results):
+        p = power.power(t)
+        a = area.area(t)
+        name = t.name.rsplit("_", 1)[0]
+        print(f"{t.n_pes:>5} {name:>10} {r.avg_latency:>8.1f} "
+              f"{r.throughput:>7.1f} {p.total_w:>9.2f} {a.lut:>8}")
 
 
 def act2_saturation(n=64):
-    print(f"\n== Act 2: saturation ramp on {n}-PE ring-mesh ==")
+    print(f"\n== Act 2: saturation ramp on {n}-PE ring-mesh "
+          "(one vmapped sweep) ==")
     t = topology.build_ring_mesh(n, src_queue_depth=8)
-    for ir in (0.1, 0.25, 0.5, 0.75, 1.0):
-        r = sim.simulate(t, sim.SimConfig(
-            cycles=1000, warmup=300, inj_rate=ir, pattern="uniform",
-            seed=0, **sim.PAPER_LOCALITY))
+    rates = (0.1, 0.25, 0.5, 0.75, 1.0)
+    results = sweep.sweep_grid(t, inj_rates=rates, patterns=("uniform",),
+                               seeds=(0,), cycles=1000, warmup=300,
+                               **sim.PAPER_LOCALITY)
+    for ir, r in zip(rates, results):
         bar = "#" * int(40 * r.per_pe_throughput)
         print(f"  Ir={ir:4.2f}  thr/PE={r.per_pe_throughput:5.3f} "
               f"lat={r.avg_latency:6.1f}  {bar}")
 
 
-def act3_morphing(n=64):
-    print(f"\n== Act 3: morphing (switch ringlet 0 of block 0 off) ==")
+def act3_patterns(n=64):
+    print(f"\n== Act 3: adversarial patterns on {n}-PE ring-mesh ==")
+    t = topology.build_ring_mesh(n, src_queue_depth=8)
+    pats = ("uniform", "transpose", "shuffle", "tornado", "hotspot")
+    results = sweep.sweep_grid(t, inj_rates=(0.5,), patterns=pats,
+                               seeds=(0,), cycles=1000, warmup=300)
+    for pat, r in zip(pats, results):
+        print(f"  {pat:>12}  lat={r.avg_latency:6.1f} "
+              f"thr/PE={r.per_pe_throughput:5.3f} dropped={r.dropped} "
+              f"lost={r.lost}")
+
+
+def act4_morphing(n=64):
+    print(f"\n== Act 4: morphing (switch ringlet 0 of block 0 off) ==")
     t = topology.build_ring_mesh(n)
     ctl = morph.MorphController(t)
     cfg = sim.SimConfig(cycles=600, warmup=200, inj_rate=0.2,
@@ -69,7 +87,8 @@ def act3_morphing(n=64):
 def main():
     act1_compare()
     act2_saturation()
-    act3_morphing()
+    act3_patterns()
+    act4_morphing()
     print("\nnoc_explorer OK")
 
 

@@ -4,18 +4,20 @@ Public surface:
     packet     — 43-bit single-flit codec + morph packets + escape protocol
     topology   — ring-mesh & flat-mesh link graphs + static route tables
     sim        — vectorized cycle-level simulator (lax.scan)
+    sweep      — batched sweep engine (vmapped grids, one compile/geometry)
     analytic   — diameter / bisection closed forms (§6)
     area       — FPGA resource model (Tables 2-3)
     power      — power model (Table 2, Figs 7-8)
     morph      — dynamic reconfiguration (§5)
 """
-from repro.core import analytic, area, morph, packet, power, sim, topology
+from repro.core import analytic, area, morph, packet, power, sim, sweep, topology
 from repro.core.sim import (PAPER_LOCALITY, PATTERNS, SimConfig, SimResult,
                             simulate)
 from repro.core.topology import Topology, build, build_flat_mesh, build_ring_mesh
 
 __all__ = [
-    "analytic", "area", "morph", "packet", "power", "sim", "topology",
+    "analytic", "area", "morph", "packet", "power", "sim", "sweep",
+    "topology",
     "PAPER_LOCALITY", "PATTERNS", "SimConfig", "SimResult", "simulate",
     "Topology", "build", "build_flat_mesh", "build_ring_mesh",
 ]

@@ -15,14 +15,27 @@ inject buffer is deeper, Fig. 4's Buf-3).  Each cycle:
 4. traffic generators inject new single-flit packets Bernoulli(Ir) per PE
    (§7.2), with optional ringlet/block locality (§3's operating regime).
 
-The per-cycle update is a fixed bundle of gathers/scatters/segment-reductions
-over ~O(links) arrays — it JITs to a handful of fused XLA ops, which is the
-TPU-native adaptation of the paper's VHDL traffic generators.
+Hot-path layout (DESIGN.md §4): the per-cycle update is scatter-free.
+Arbitration and enqueue both run over *static fan-in candidate tables*
+(every queue can only receive traffic from the queues entering its source
+node, a property of the topology, not of the current route table), so the
+whole step is gathers, compares, row-reductions and masked writes — no
+``segment_max``/scatter ops, which dominate CPU wall-clock.  The
+arbitration fixpoint is a single early-exiting ``lax.while_loop`` with a
+residue check instead of two fixed 12-iteration scans.  All per-point
+parameters (injection rate, locality, seed, destination map) are *traced*,
+so one XLA compilation covers a whole sweep grid; ``core.sweep`` vmaps the
+same step over batches of points.
+
+Accumulators are integers (latency is in whole cycles), so batched and
+single-point executions produce bit-identical metrics regardless of XLA
+reduction order; ``lat_sum``'s int32 envelope (cycles x total buffer
+capacity < 2^31 — every in-flight flit accrues one latency cycle per
+cycle) is asserted at trace time.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -35,7 +48,18 @@ from repro.core import topology as topo_mod
 UNIFORM = "uniform"
 BIT_REVERSAL = "bit_reversal"
 TRANSPOSE = "transpose"
-PATTERNS = (UNIFORM, BIT_REVERSAL, TRANSPOSE)
+SHUFFLE = "shuffle"
+TORNADO = "tornado"
+HOTSPOT = "hotspot"
+PATTERNS = (UNIFORM, BIT_REVERSAL, TRANSPOSE, SHUFFLE, TORNADO, HOTSPOT)
+
+# Arbitration fixpoint iteration cap.  The grant/prune cascade peels at
+# most one queue per iteration along a blocked chain, so the cap bounds the
+# chain depth handled exactly; beyond it the residue counter (`lost`)
+# flags the approximation.  24 matches the seed's 12 re-arb + 12 prune
+# passes; the while_loop exits as soon as the winner set is feasible, which
+# under normal load happens in 1-3 iterations.
+ARB_ITERS = 24
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,273 +106,502 @@ class SimResult:
             "per_pe_throughput": round(self.per_pe_throughput, 4),
             "flit_hops_per_cycle": round(self.flit_hops_per_cycle, 3),
             "delivered": self.delivered, "offered": self.offered,
-            "dropped": self.dropped,
+            "dropped": self.dropped, "lost": self.lost,
+            "in_flight": self.in_flight,
         }
 
 
 def pattern_destinations(pattern: str, n_pes: int) -> Optional[np.ndarray]:
-    """Fixed destination permutation, or None for uniform-random."""
+    """Fixed destination map, or None for uniform-random.
+
+    All patterns except ``hotspot`` are permutations; ``hotspot`` is the
+    classic many-to-one stress pattern (every PE targets the center PE).
+    """
     if pattern == UNIFORM:
         return None
+    src = np.arange(n_pes)
+    if pattern == TORNADO:
+        # Dally & Towles: each node sends (almost) half-way around.
+        return ((src + max(1, n_pes // 2 - 1)) % n_pes).astype(np.int32)
+    if pattern == HOTSPOT:
+        hot = n_pes // 2
+        dst = np.full(n_pes, hot, np.int32)
+        dst[hot] = 0  # the hotspot itself targets PE 0
+        return dst
     bits = int(np.log2(n_pes))
     assert (1 << bits) == n_pes, "pattern sizes must be powers of two"
-    src = np.arange(n_pes)
     if pattern == BIT_REVERSAL:
         return pk.bitreverse(src, bits).astype(np.int32)
     if pattern == TRANSPOSE:
         return pk.transpose_perm(src, bits).astype(np.int32)
+    if pattern == SHUFFLE:
+        # Perfect shuffle: rotate the address left by one bit.
+        return (((src << 1) | (src >> (bits - 1))) & (n_pes - 1)).astype(
+            np.int32)
     raise ValueError(pattern)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_links", "n_phys", "n_pes", "depth", "cycles",
-                     "warmup", "starvation_limit", "uniform_pattern"),
-)
-def _run(route, kind, prio, cap, phys, pe_src_link, is_sink, perm_dst,
-         *, n_links, n_phys, n_pes, depth, cycles, warmup, starvation_limit,
-         inj_rate, loc_ring, loc_block, seed, uniform_pattern):
-    L, P, K = n_links, n_pes, depth
-    LD = L  # dummy row index (queues have L+1 rows; row L is scratch)
-    PD = n_phys  # dummy arbitration segment
-    link_ids = jnp.arange(L + 1, dtype=jnp.int32)
-    pow2 = 1 << int(np.ceil(np.log2(L + 1)))
+# ---------------------------------------------------------------------------
+# Per-point traced parameters and metric accumulators (both are pytrees so
+# `core.sweep` can vmap whole grids of them through one compilation).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One sweep-grid coordinate.  Every field is traced (never a compile
+    key): rates/localities are f32 scalars, the destination map is always
+    passed (``use_perm`` selects it against uniform-random draws)."""
+    inj_rate: jax.Array
+    loc_ring: jax.Array
+    loc_block: jax.Array
+    seed: jax.Array
+    use_perm: jax.Array
+    perm_dst: jax.Array  # [n_pes] int32
 
-    route = jnp.concatenate([route, jnp.full((1, P), -1, jnp.int32)], axis=0)
-    kind = jnp.concatenate([kind.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
-    prio = jnp.concatenate([prio, jnp.zeros((1,), jnp.int32)])
-    cap = jnp.concatenate([cap, jnp.full((1,), 1 << 30, jnp.int32)])
-    phys = jnp.concatenate([phys, jnp.full((1,), PD, jnp.int32)])
-    is_sink = jnp.concatenate([is_sink, jnp.zeros((1,), bool)])
 
-    q_dst0 = jnp.full((L + 1, K), -1, jnp.int32)
-    q_born0 = jnp.zeros((L + 1, K), jnp.int32)
-    q_len0 = jnp.zeros((L + 1,), jnp.int32)
-    wait0 = jnp.zeros((L + 1,), jnp.int32)
-    key0 = jax.random.PRNGKey(seed)
-    metrics0 = dict(
-        delivered=jnp.int32(0), offered=jnp.int32(0), accepted=jnp.int32(0),
-        dropped=jnp.int32(0), lat_sum=jnp.float32(0.0), moved=jnp.float32(0.0),
-        lost=jnp.int32(0),
-        wins_by_kind=jnp.zeros((8,), jnp.int32),
-        stall_next_kind=jnp.zeros((8,), jnp.int32),
+jax.tree_util.register_dataclass(
+    SweepPoint,
+    data_fields=["inj_rate", "loc_ring", "loc_block", "seed", "use_perm",
+                 "perm_dst"],
+    meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    """Integer metric accumulators carried through the cycle scan."""
+    delivered: jax.Array
+    offered: jax.Array
+    accepted: jax.Array
+    dropped: jax.Array
+    lost: jax.Array
+    lat_sum: jax.Array   # int32: whole-cycle latencies, order-independent
+    moved: jax.Array
+    in_flight: jax.Array
+    wins_by_kind: jax.Array       # [8]
+    stall_next_kind: jax.Array    # [8]
+    q_len_by_kind: jax.Array      # [8]
+
+
+jax.tree_util.register_dataclass(
+    Metrics,
+    data_fields=["delivered", "offered", "accepted", "dropped", "lost",
+                 "lat_sum", "moved", "in_flight", "wins_by_kind",
+                 "stall_next_kind", "q_len_by_kind"],
+    meta_fields=[])
+
+
+def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
+    """Host-side SweepPoint for one SimConfig."""
+    perm = pattern_destinations(cfg.pattern, n_pes)
+    use_perm = perm is not None
+    if perm is None:
+        perm = np.zeros((n_pes,), np.int32)
+    return SweepPoint(
+        inj_rate=np.float32(cfg.inj_rate),
+        loc_ring=np.float32(cfg.locality_ringlet),
+        loc_block=np.float32(cfg.locality_block),
+        seed=np.int32(cfg.seed),
+        use_perm=np.bool_(use_perm),
+        perm_dst=np.asarray(perm, np.int32),
     )
 
-    pes = jnp.arange(P, dtype=jnp.int32)
 
-    def step(carry, cycle):
-        q_dst, q_born, q_len, wait, key, m = carry
+# ---------------------------------------------------------------------------
+# Geometry: topology arrays preprocessed for the scatter-free step.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """Device-ready topology view.  Shapes (not values) are the compile
+    key: one XLA program serves every sweep point on this geometry.
+
+    ``cand``/``intab`` are *structural* fan-in tables: queue q can only
+    ever receive a flit from a queue whose destination node is q's source
+    node (routes are node-local, an invariant morphing preserves), so they
+    are supersets of any route table's live edges and stay valid across
+    morphs.  Runtime masks (`nxt == target`) select the live subset.
+    """
+    route: jax.Array      # [L+1, P] int16 (refreshed per call: morph-aware)
+    kind: jax.Array       # [L+1] int32
+    prio: jax.Array       # [L+1] int32
+    cap: jax.Array        # [L+1] int32
+    phys: jax.Array       # [L+1] int32 (dummy row -> n_phys)
+    is_sink: jax.Array    # [L+1] bool
+    pe_src_link: jax.Array  # [P] int32
+    inj_pe: jax.Array     # [L+1] int32: PE injecting into this row, or -1
+    cand: jax.Array       # [n_phys+1, Fc] int32 queue ids (pad = L)
+    intab: jax.Array      # [L+1, Fi] int32 queue ids (pad = L)
+    n_links: int
+    n_phys: int
+    n_pes: int
+    depth: int
+    cap_total: int        # sum of finite queue capacities (lat_sum bound)
+
+
+jax.tree_util.register_dataclass(
+    Geometry,
+    data_fields=["route", "kind", "prio", "cap", "phys", "is_sink",
+                 "pe_src_link", "inj_pe", "cand", "intab"],
+    meta_fields=["n_links", "n_phys", "n_pes", "depth", "cap_total"])
+
+
+def _structural_cache(topo: topo_mod.Topology) -> dict:
+    """Route-independent device arrays, cached on the topology object."""
+    cache = topo.__dict__.get("_sim_geometry_cache")
+    if cache is not None:
+        return cache
+    L, P = topo.n_links, topo.n_pes
+    assert L + 1 < (1 << 15), "int16 queue ids require < 32767 links"
+    src = topo.link_src_node
+    dst = topo.link_dst_node
+    # Structural invariant behind the fan-in tables: every route hop is
+    # node-local (next queue leaves the current queue's destination node).
+    nxt = topo.route_table
+    live = nxt >= 0
+    src_of_nxt = src[np.clip(nxt, 0, L - 1)]
+    assert np.all(src_of_nxt[live] == np.broadcast_to(dst[:, None],
+                                                      nxt.shape)[live]), \
+        "route table contains a non-node-local hop"
+
+    n_nodes = int(max(src.max(), dst.max())) + 1
+    buckets: list[list[int]] = [[] for _ in range(n_nodes)]
+    for q in range(L):
+        if dst[q] >= 0:
+            buckets[dst[q]].append(q)
+    fi = max((len(b) for b in buckets), default=1) or 1
+
+    intab = np.full((L + 1, fi), L, np.int32)
+    for q in range(L):
+        if src[q] >= 0:
+            b = buckets[src[q]]
+            intab[q, :len(b)] = b
+    cand = np.full((topo.n_phys + 1, fi), L, np.int32)
+    phys = topo.link_phys
+    for q in range(L):
+        if src[q] >= 0:
+            b = buckets[src[q]]
+            cand[phys[q], :len(b)] = b
+
+    inj_pe = np.full(L + 1, -1, np.int32)
+    inj_pe[topo.pe_src_link] = np.arange(P, dtype=np.int32)
+
+    finite = topo.link_cap < (1 << 29)
+    cache = dict(
+        kind=jnp.asarray(np.concatenate([topo.link_kind.astype(np.int32),
+                                         [0]])),
+        prio=jnp.asarray(np.concatenate([topo.link_prio.astype(np.int32),
+                                         [0]])),
+        cap=jnp.asarray(np.concatenate([topo.link_cap.astype(np.int32),
+                                        [1 << 30]])),
+        phys=jnp.asarray(np.concatenate([phys.astype(np.int32),
+                                         [topo.n_phys]])),
+        is_sink=jnp.asarray(np.concatenate([topo.is_sink,
+                                            [False]])),
+        pe_src_link=jnp.asarray(topo.pe_src_link.astype(np.int32)),
+        inj_pe=jnp.asarray(inj_pe),
+        cand=jnp.asarray(cand),
+        intab=jnp.asarray(intab),
+        depth=int(topo.link_cap[finite].max()),
+        cap_total=int(topo.link_cap[finite].sum()),
+    )
+    topo.__dict__["_sim_geometry_cache"] = cache
+    return cache
+
+
+def build_geometry(topo: topo_mod.Topology) -> Geometry:
+    """Device-ready geometry; the route table is re-read every call so
+    in-place morphs (``core.morph``) take effect immediately."""
+    c = _structural_cache(topo)
+    route = np.concatenate(
+        [topo.route_table.astype(np.int16),
+         np.full((1, topo.n_pes), -1, np.int16)], axis=0)
+    return Geometry(
+        route=jnp.asarray(route),
+        kind=c["kind"], prio=c["prio"], cap=c["cap"], phys=c["phys"],
+        is_sink=c["is_sink"], pe_src_link=c["pe_src_link"],
+        inj_pe=c["inj_pe"], cand=c["cand"], intab=c["intab"],
+        n_links=topo.n_links, n_phys=topo.n_phys, n_pes=topo.n_pes,
+        depth=c["depth"], cap_total=c["cap_total"])
+
+
+# ---------------------------------------------------------------------------
+# The hot path.
+# ---------------------------------------------------------------------------
+def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
+              starvation_limit: int, arb_iters: int = ARB_ITERS,
+              diagnostics: bool = False) -> Metrics:
+    L, P, K = geom.n_links, geom.n_pes, geom.depth
+    NP1 = geom.n_phys + 1
+    link_ids = jnp.arange(L + 1, dtype=jnp.int32)
+    pow2 = 1 << int(np.ceil(np.log2(L + 1)))
+    row_ids = link_ids[:, None]                      # [L+1, 1]
+    p_ids = jnp.arange(NP1, dtype=jnp.int32)[:, None]  # [NP1, 1]
+    colK = jnp.arange(K, dtype=jnp.int32)[None, :]   # [1, K]
+    kinds8 = jnp.arange(8, dtype=jnp.int32)[:, None]  # [8, 1]
+    kind_oh = geom.kind[None, :] == kinds8           # [8, L+1] static mask
+
+    # --- traffic pregeneration (cycle-invariant work hoisted out of the
+    # scan: peer indices are static, all randomness is drawn in five large
+    # vectorized calls instead of per-cycle splits) ----------------------
+    pes = jnp.arange(P, dtype=jnp.int32)
+    ring_base = pes - pes % pk.PES_PER_RINGLET
+    pos_ring = pes % pk.PES_PER_RINGLET
+    blk_base = pes - pes % pk.PES_PER_BLOCK
+    pos_blk = pes % pk.PES_PER_BLOCK
+
+    key = jax.random.PRNGKey(point.seed)
+    k_inj, k_dst, k_loc, k_ring, k_blk = jax.random.split(key, 5)
+    inj_s = jax.random.bernoulli(k_inj, point.inj_rate, (cycles, P))
+    off_s = jax.random.randint(k_dst, (cycles, P), 1, P, dtype=jnp.int32)
+    u_s = jax.random.uniform(k_loc, (cycles, P))
+    ring_s = jax.random.randint(k_ring, (cycles, P), 1, pk.PES_PER_RINGLET,
+                                dtype=jnp.int32)
+    blk_s = jax.random.randint(k_blk, (cycles, P), 1, pk.PES_PER_BLOCK,
+                               dtype=jnp.int32)
+    base_s = (pes[None, :] + off_s) % P  # uniform over everyone else
+    base_s = jnp.where(point.use_perm,
+                       jnp.broadcast_to(point.perm_dst, (cycles, P)), base_s)
+    ring_peer = ring_base + (pos_ring[None, :] + ring_s) % pk.PES_PER_RINGLET
+    blk_peer = blk_base + (pos_blk[None, :] + blk_s) % pk.PES_PER_BLOCK
+    dst_s = jnp.where(
+        u_s < point.loc_ring, ring_peer,
+        jnp.where(u_s < point.loc_ring + point.loc_block, blk_peer,
+                  base_s)).astype(jnp.int16)
+
+    # Queue payload: one packed int32 word per slot, ``born << 11 | dst+1``
+    # (n_pes <= 1024 so dst+1 < 2048; empty slot = 0 -> dst -1).  One array
+    # instead of separate dst/born halves the queue shift/write traffic,
+    # and a whole flit moves as a single gathered word.
+    assert cycles < (1 << 20), "packed born field supports < 2^20 cycles"
+    # lat_sum <= cycles * (flits simultaneously in flight) <= cycles *
+    # total finite buffer capacity: every in-flight flit accrues one cycle
+    # of eventual latency per cycle.  Enforce the int32 envelope exactly.
+    assert cycles * geom.cap_total < (1 << 31), \
+        "int32 lat_sum could overflow for this (cycles, topology) budget"
+    q_pack0 = jnp.zeros((L + 1, K), jnp.int32)
+    q_len0 = jnp.zeros((L + 1,), jnp.int32)
+    wait0 = jnp.zeros((L + 1,), jnp.int32)
+    z8 = jnp.zeros((8,), jnp.int32)
+    metrics0 = Metrics(*([jnp.int32(0)] * 8), z8, z8, z8)
+
+    def step(carry, xs):
+        q_pack, q_len, wait, m = carry
+        cycle, inj, dst = xs
         measure = cycle >= warmup
 
-        # --- 1. routing: next link for every queue head --------------------
-        head_dst = q_dst[:, 0]
-        head_born = q_born[:, 0]
+        # --- 1. routing: next link for every queue head ------------------
+        head_pack = q_pack[:, 0]
+        head_dst = (head_pack & 2047) - 1
+        head_born = head_pack >> 11
         valid = q_len > 0
         nxt = jnp.take_along_axis(
-            route, jnp.clip(head_dst, 0, P - 1)[:, None], axis=1)[:, 0]
+            geom.route, jnp.clip(head_dst, 0, P - 1)[:, None],
+            axis=1)[:, 0].astype(jnp.int32)
         nxt = jnp.where(valid, nxt, -1)
         nxt_c = jnp.clip(nxt, 0, L)
+        nxt_phys = geom.phys[nxt_c]
 
         # Switched-off routes (INVALID) drop the flit — paper §5.1.
-        drop_route = valid & (nxt < 0) & valid
+        drop_route = valid & (nxt < 0)
 
-        # --- 2. arbitration over each output link ---------------------------
-        # Optimistic winner selection (ignores space), then iterative
-        # feasibility pruning: a winner keeps its grant iff its target queue
-        # has a free slot *after this cycle's departures*.  A completely
-        # full cycle of queues whose heads all chase each other therefore
-        # advances in lockstep (slotted-ring semantics) instead of
-        # deadlocking, while chains blocked on a stalled head prune
-        # backwards — see DESIGN.md §4.
+        # --- 2. arbitration over each output physical channel ------------
+        # One grant per physical channel per cycle; the two VC queues of a
+        # channel are separate contenders and separate targets.  Weighted
+        # round-robin (§4.2): in-ring traffic leads by a small static
+        # margin; waiting inputs age upward so no port starves.
         contend = valid & (nxt >= 0)
-        # Weighted round-robin (§4.2): in-ring traffic leads by a small
-        # static margin; waiting inputs age upward so no port starves (the
-        # paper's "after a fixed amount of elapsed cycles" rule).
-        eff_prio = prio * 2 + jnp.minimum(wait, starvation_limit)
-        rot = (link_ids + cycle) & (pow2 - 1)            # unique RR tiebreak
-        score = eff_prio * pow2 + rot
+        eff_prio = geom.prio * 2 + jnp.minimum(wait, starvation_limit)
+        rot = (link_ids + cycle) & (pow2 - 1)     # unique RR tiebreak
+        score = eff_prio * pow2 + rot             # globally unique
 
-        def _select(active):
-            # One grant per *physical* channel per cycle; the two VC queues
-            # of a channel are separate contenders and separate targets.
-            seg = jnp.where(active, phys[nxt_c], PD).astype(jnp.int32)
-            best = jax.ops.segment_max(score, seg, num_segments=n_phys + 1)
-            return active & (score == best[seg])
+        # Iteration-invariant gathers, hoisted out of the fixpoint loop:
+        # candidate scores, candidate->channel match, and the target-queue
+        # occupancy/capacity only change per cycle, not per re-arbitration.
+        cand_score = jnp.where(nxt_phys[geom.cand] == p_ids,
+                               score[geom.cand], -1)   # [NP1, Fc]
+        ql_t = q_len[nxt_c]
+        cap_t = geom.cap[nxt_c]
 
-        # Grant-and-re-arbitrate fixpoint.  A grant into a full queue is only
-        # feasible if that queue's own head departs this cycle (lockstep /
-        # slotted-ring semantics: completely full cycles of queues rotate).
-        # Infeasible grantees are removed from the candidate set and the
-        # output is re-arbitrated, so an aged high-priority head stuck on a
-        # frozen queue cannot shadow a feasible lower-priority contender
-        # (priority inversion would otherwise hard-deadlock the hierarchy).
-        def _rearb(active, _):
-            w = _select(active)
-            feasible = (q_len[nxt_c] - w[nxt_c].astype(jnp.int32)) < cap[nxt_c]
-            return active & ~(w & ~feasible), None
+        def select(active):
+            # Scatter-free argmax per output channel: mask each channel's
+            # structural candidates to the active ones, row-max, then
+            # winners are the queues matching their channel's best score
+            # (scores are globally unique).
+            best = jnp.max(jnp.where(active[geom.cand], cand_score, -1),
+                           axis=1)
+            return active & (score == best[nxt_phys])
 
-        active, _ = jax.lax.scan(_rearb, contend, None, length=12)
-        winner = _select(active)
+        def feasible(w):
+            # A grant into a full queue is only feasible if that queue's
+            # own head departs this cycle (lockstep / slotted-ring
+            # semantics: completely full cycles of queues rotate).
+            return (ql_t - w[nxt_c].astype(jnp.int32)) < cap_t
 
-        def _prune(w, _):
-            feasible = (q_len[nxt_c] - w[nxt_c].astype(jnp.int32)) < cap[nxt_c]
-            return w & feasible, None
-
-        winner, _ = jax.lax.scan(_prune, winner, None, length=12)
-        # Monotone pruning converges for dependency chains up to the
-        # iteration count; any residue is counted (and not moved) so the
+        # Grant-and-re-arbitrate fixpoint with early exit.  Infeasible
+        # grantees are removed from the candidate set and the output is
+        # re-arbitrated, so an aged high-priority head stuck on a frozen
+        # queue cannot shadow a feasible lower-priority contender (priority
+        # inversion would otherwise hard-deadlock the hierarchy).  Any
+        # residue past the iteration cap is counted (and not moved) so the
         # conservation property stays exact.
-        residue = winner & ~((q_len[nxt_c] - winner[nxt_c].astype(jnp.int32))
-                             < cap[nxt_c])
+        w0 = select(contend)
+        feas0 = feasible(w0)
+
+        def arb_cond(s):
+            return s[3] & (s[4] < arb_iters)
+
+        def arb_body(s):
+            active, w, feas_w, _, i = s
+            active = active & (~w | feas_w)
+            w = select(active)
+            feas_w = feasible(w)
+            return (active, w, feas_w, jnp.any(w & ~feas_w), i + 1)
+
+        _, winner, feas_w, _, _ = jax.lax.while_loop(
+            arb_cond, arb_body,
+            (contend, w0, feas0, jnp.any(w0 & ~feas0), jnp.int32(1)))
+        residue = winner & ~feas_w
         winner = winner & ~residue
 
         deq = winner | drop_route
-        sink = is_sink[nxt_c]
-        enq = winner & ~sink
+        sink = geom.is_sink[nxt_c]
+        send = winner & ~sink
 
-        # --- 3. apply moves --------------------------------------------------
-        q_dst = jnp.where(deq[:, None],
-                          jnp.concatenate([q_dst[:, 1:],
-                                           jnp.full((L + 1, 1), -1, jnp.int32)], 1),
-                          q_dst)
-        q_born = jnp.where(deq[:, None],
-                           jnp.concatenate([q_born[:, 1:],
-                                            jnp.zeros((L + 1, 1), jnp.int32)], 1),
-                           q_born)
+        # --- 3. apply moves ----------------------------------------------
+        q_pack = jnp.where(
+            deq[:, None],
+            jnp.concatenate([q_pack[:, 1:],
+                             jnp.zeros((L + 1, 1), jnp.int32)], 1), q_pack)
         q_len = q_len - deq.astype(jnp.int32)
 
-        # Exactness guard: second-order effects of residue removal could
-        # leave a grant whose target is still full; such moves become
-        # counted drops rather than corrupting queue state (kept 0 by the
-        # prune loop in practice — asserted by the conservation tests).
-        lost_enq = enq & (q_len[nxt_c] >= cap[nxt_c])
-        enq = enq & ~lost_enq
-
-        tgt = jnp.where(enq, nxt_c, LD)
-        pos = jnp.clip(q_len[tgt], 0, K - 1)
-        q_dst = q_dst.at[tgt, pos].set(jnp.where(enq, head_dst, -1))
-        q_born = q_born.at[tgt, pos].set(jnp.where(enq, head_born, 0))
-        q_len = q_len.at[tgt].add(enq.astype(jnp.int32))
+        # Scatter-free enqueue: invert the move map through the structural
+        # fan-in table — each queue row finds the (unique) sender targeting
+        # it, then writes its tail slot with a one-hot column mask.
+        inc = send[geom.intab] & (nxt_c[geom.intab] == row_ids)
+        src_q = jnp.max(jnp.where(inc, geom.intab, -1), axis=1)
+        has_in = src_q >= 0
+        src_qc = jnp.clip(src_q, 0, L)
+        # Exactness guard: a residue removal can leave a grant whose target
+        # is still full; such moves become counted drops rather than
+        # corrupting queue state (kept 0 by the fixpoint in practice —
+        # asserted by the conservation tests).
+        lost_enq_row = has_in & (q_len >= geom.cap)
+        enq_row = has_in & ~lost_enq_row
 
         deliver = winner & sink
         delivered_c = jnp.sum(deliver.astype(jnp.int32))
-        lat_c = jnp.sum(jnp.where(deliver, (cycle - head_born), 0)
-                        .astype(jnp.float32))
-        moved_c = jnp.sum(winner.astype(jnp.float32))
+        lat_c = jnp.sum(jnp.where(deliver, cycle - head_born, 0))
+        moved_c = jnp.sum(winner.astype(jnp.int32))
         wait = jnp.where(valid & ~deq, wait + 1, 0)
 
-        # --- 4. injection -----------------------------------------------------
-        key, k_inj, k_dst, k_loc, k_ring, k_blk = jax.random.split(key, 6)
-        inj = jax.random.bernoulli(k_inj, inj_rate, (P,))
-        if uniform_pattern:
-            off = jax.random.randint(k_dst, (P,), 1, P, dtype=jnp.int32)
-            base_dst = (pes + off) % P  # uniform over everyone else
-        else:
-            base_dst = perm_dst
-        r = jax.random.uniform(k_loc, (P,))
-        ring_base = pes - pes % pk.PES_PER_RINGLET
-        ring_off = jax.random.randint(k_ring, (P,), 1, pk.PES_PER_RINGLET,
-                                      dtype=jnp.int32)
-        ring_peer = ring_base + (pes % pk.PES_PER_RINGLET + ring_off) % pk.PES_PER_RINGLET
-        blk_base = pes - pes % pk.PES_PER_BLOCK
-        blk_off = jax.random.randint(k_blk, (P,), 1, pk.PES_PER_BLOCK,
-                                     dtype=jnp.int32)
-        blk_peer = blk_base + (pes % pk.PES_PER_BLOCK + blk_off) % pk.PES_PER_BLOCK
-        dst = jnp.where(r < loc_ring, ring_peer,
-                        jnp.where(r < loc_ring + loc_block, blk_peer, base_dst))
-
-        src_l = pe_src_link
-        room = q_len[src_l] < cap[src_l]
+        # --- 4. injection ------------------------------------------------
+        # Nothing ever routes *into* a PE_SRC queue, so enqueue and
+        # injection touch disjoint rows and share one tail-write pass
+        # against the same post-move q_len.
+        room = q_len[geom.pe_src_link] < geom.cap[geom.pe_src_link]
         acc = inj & room
-        tgt2 = jnp.where(acc, src_l, LD)
-        pos2 = jnp.clip(q_len[tgt2], 0, K - 1)
-        q_dst = q_dst.at[tgt2, pos2].set(jnp.where(acc, dst, -1))
-        q_born = q_born.at[tgt2, pos2].set(jnp.where(acc, cycle, 0))
-        q_len = q_len.at[tgt2].add(acc.astype(jnp.int32))
+        pe_of_row = geom.inj_pe
+        pec = jnp.clip(pe_of_row, 0, P - 1)
+        acc_row = (pe_of_row >= 0) & acc[pec]
 
-        # scrub the scratch row
-        q_len = q_len.at[LD].set(0)
+        put = enq_row | acc_row
+        tail = put[:, None] & (colK == jnp.clip(q_len, 0, K - 1)[:, None])
+        inj_pack = (cycle << 11) | (dst[pec].astype(jnp.int32) + 1)
+        val = jnp.where(enq_row, head_pack[src_qc], inj_pack)
+        q_pack = jnp.where(tail, val[:, None], q_pack)
+        q_len = q_len + put.astype(jnp.int32)
 
         g = measure.astype(jnp.int32)
-        gf = measure.astype(jnp.float32)
-        m["wins_by_kind"] = m["wins_by_kind"] + g * jax.ops.segment_sum(
-            winner.astype(jnp.int32), kind, num_segments=8)
-        m["stall_next_kind"] = m["stall_next_kind"] + g * jax.ops.segment_sum(
-            (contend & ~winner).astype(jnp.int32),
-            jnp.where(contend & ~winner, kind[nxt_c], 7),
-            num_segments=8)
-        m = dict(
-            wins_by_kind=m["wins_by_kind"],
-            stall_next_kind=m["stall_next_kind"],
-            delivered=m["delivered"] + g * delivered_c,
-            offered=m["offered"] + g * jnp.sum(inj.astype(jnp.int32)),
-            accepted=m["accepted"] + g * jnp.sum(acc.astype(jnp.int32)),
-            dropped=m["dropped"]
+        if diagnostics:
+            stalled = contend & ~winner
+            stall_kind = geom.kind[nxt_c]
+            wins = m.wins_by_kind + g * jnp.sum(
+                kind_oh & winner[None, :], axis=1, dtype=jnp.int32)
+            stalls = m.stall_next_kind + g * jnp.sum(
+                (stall_kind[None, :] == kinds8) & stalled[None, :], axis=1,
+                dtype=jnp.int32)
+        else:
+            wins, stalls = m.wins_by_kind, m.stall_next_kind
+        m = Metrics(
+            delivered=m.delivered + g * delivered_c,
+            offered=m.offered + g * jnp.sum(inj.astype(jnp.int32)),
+            accepted=m.accepted + g * jnp.sum(acc.astype(jnp.int32)),
+            dropped=m.dropped
             + g * (jnp.sum((inj & ~room).astype(jnp.int32))
                    + jnp.sum(drop_route.astype(jnp.int32))
-                   + jnp.sum(lost_enq.astype(jnp.int32))),
-            lost=m["lost"] + jnp.sum(lost_enq.astype(jnp.int32))
+                   + jnp.sum(lost_enq_row.astype(jnp.int32))),
+            lost=m.lost + jnp.sum(lost_enq_row.astype(jnp.int32))
             + jnp.sum(residue.astype(jnp.int32)),
-            lat_sum=m["lat_sum"] + gf * lat_c,
-            moved=m["moved"] + gf * moved_c,
+            lat_sum=m.lat_sum + g * lat_c,
+            moved=m.moved + g * moved_c,
+            in_flight=m.in_flight,
+            wins_by_kind=wins,
+            stall_next_kind=stalls,
+            q_len_by_kind=m.q_len_by_kind,
         )
-        return (q_dst, q_born, q_len, wait, key, m), None
+        return (q_pack, q_len, wait, m), None
 
-    carry0 = (q_dst0, q_born0, q_len0, wait0, key0, metrics0)
-    (qd, qb, ql, w, k, metrics), _ = jax.lax.scan(
-        step, carry0, jnp.arange(cycles, dtype=jnp.int32))
-    metrics["in_flight"] = jnp.sum(ql)
-    metrics["q_len_by_kind"] = jax.ops.segment_sum(
-        ql[:-1], kind[:-1], num_segments=8)
-    metrics["final_state"] = (qd, qb, ql, w)
-    return metrics
+    carry0 = (q_pack0, q_len0, wait0, metrics0)
+    xs = (jnp.arange(cycles, dtype=jnp.int32), inj_s, dst_s)
+    (qp, ql, w, m), _ = jax.lax.scan(step, carry0, xs)
+    return dataclasses.replace(
+        m,
+        in_flight=jnp.sum(ql),
+        q_len_by_kind=jnp.sum(jnp.where(kind_oh, ql[None, :], 0), axis=1,
+                              dtype=jnp.int32))
+
+
+_run_single = jax.jit(
+    _run_core,
+    static_argnames=("cycles", "warmup", "starvation_limit", "arb_iters",
+                     "diagnostics"))
+
+
+def _to_result(topo: topo_mod.Topology, cfg: SimConfig,
+               m: Metrics) -> SimResult:
+    """Shared host-side conversion (identical for single and batched runs,
+    which keeps the sweep/simulate equivalence exact)."""
+    mc = cfg.cycles - cfg.warmup
+    delivered = int(m.delivered)
+    return SimResult(
+        topology=topo.name, n_pes=topo.n_pes, cfg=cfg,
+        delivered=delivered,
+        offered=int(m.offered),
+        accepted=int(m.accepted),
+        dropped=int(m.dropped),
+        lost=int(m.lost),
+        in_flight=int(m.in_flight),
+        measured_cycles=mc,
+        avg_latency=int(m.lat_sum) / max(delivered, 1),
+        throughput=delivered / mc,
+        flit_hops_per_cycle=int(m.moved) / mc,
+        per_pe_throughput=delivered / mc / topo.n_pes,
+    )
 
 
 def simulate(topo: topo_mod.Topology, cfg: SimConfig) -> SimResult:
     """Run one simulation; returns steady-state metrics."""
-    perm = pattern_destinations(cfg.pattern, topo.n_pes)
-    uniform = perm is None
-    if perm is None:
-        perm = np.zeros((topo.n_pes,), np.int32)
-    depth = int(topo.link_cap[topo.link_cap < (1 << 29)].max())
-    metrics = _run(
-        jnp.asarray(topo.route_table),
-        jnp.asarray(topo.link_kind),
-        jnp.asarray(topo.link_prio),
-        jnp.asarray(topo.link_cap),
-        jnp.asarray(topo.link_phys),
-        jnp.asarray(topo.pe_src_link),
-        jnp.asarray(topo.is_sink),
-        jnp.asarray(perm),
-        n_links=topo.n_links, n_phys=topo.n_phys, n_pes=topo.n_pes,
-        depth=depth,
-        cycles=cfg.cycles, warmup=cfg.warmup,
-        starvation_limit=cfg.starvation_limit,
-        inj_rate=cfg.inj_rate, loc_ring=cfg.locality_ringlet,
-        loc_block=cfg.locality_block, seed=cfg.seed,
-        uniform_pattern=uniform,
-    )
-    metrics = dict(metrics)
-    for k in ("q_len_by_kind", "wins_by_kind", "stall_next_kind",
-              "final_state"):
-        metrics.pop(k, None)
-    metrics = jax.tree.map(lambda x: np.asarray(x).item(), metrics)
-    mc = cfg.cycles - cfg.warmup
-    delivered = int(metrics["delivered"])
-    return SimResult(
-        topology=topo.name, n_pes=topo.n_pes, cfg=cfg,
-        delivered=delivered,
-        offered=int(metrics["offered"]),
-        accepted=int(metrics["accepted"]),
-        dropped=int(metrics["dropped"]),
-        lost=int(metrics["lost"]),
-        in_flight=int(metrics["in_flight"]),
-        measured_cycles=mc,
-        avg_latency=metrics["lat_sum"] / max(delivered, 1),
-        throughput=delivered / mc,
-        flit_hops_per_cycle=metrics["moved"] / mc,
-        per_pe_throughput=delivered / mc / topo.n_pes,
-    )
+    geom = build_geometry(topo)
+    point = make_point(cfg, topo.n_pes)
+    metrics = _run_single(geom, point, cycles=cfg.cycles, warmup=cfg.warmup,
+                          starvation_limit=cfg.starvation_limit)
+    metrics = jax.tree.map(np.asarray, metrics)
+    return _to_result(topo, cfg, metrics)
+
+
+def kind_diagnostics(topo: topo_mod.Topology, cfg: SimConfig) -> dict:
+    """Per-queue-kind instrumentation: arbitration wins, stalls-by-blocking
+    -kind, and final occupancy.  Compiled separately with
+    ``diagnostics=True`` — the benchmark/sweep hot path skips these
+    counters entirely."""
+    geom = build_geometry(topo)
+    point = make_point(cfg, topo.n_pes)
+    m = _run_single(geom, point, cycles=cfg.cycles, warmup=cfg.warmup,
+                    starvation_limit=cfg.starvation_limit, diagnostics=True)
+    names = topo_mod.KIND_NAMES
+    return {
+        field: {names[k]: int(np.asarray(getattr(m, field))[k])
+                for k in names}
+        for field in ("wins_by_kind", "stall_next_kind", "q_len_by_kind")
+    }
 
 
 # Paper operating regime (§1/§3): "the majority of the traffic remains

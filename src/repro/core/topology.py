@@ -239,73 +239,71 @@ def build_ring_mesh(n_pes: int, queue_depth: int = 2,
     n_links = len(b.kind)
     kind = np.array(b.kind, np.int8)
 
-    # ---- route table ------------------------------------------------------
-    d_pos = np.arange(n_pes) % pk.PES_PER_RINGLET
-    d_ringlet_g = np.arange(n_pes) // pk.PES_PER_RINGLET   # global ringlet id
-    d_block = np.arange(n_pes) // pk.PES_PER_BLOCK
+    # ---- route table (vectorized: [rows, dests] numpy, no python loops) ---
+    RP = pk.PES_PER_RINGLET
+    d_pos = (np.arange(n_pes) % RP).astype(np.int32)
+    d_ringlet_g = (np.arange(n_pes) // RP).astype(np.int32)
+    d_block = (np.arange(n_pes) // pk.PES_PER_BLOCK).astype(np.int32)
     d_bx = d_block % bx
     d_by = d_block // bx
-
-    def mesh_vc(dest: int) -> int:
-        # Load-balance the two mesh VCs by destination-ringlet parity — the
-        # role of the paper's "dst 00/01 -> VC-0" rule (deadlock-safe: XY).
-        return int(d_ringlet_g[dest] % 2)
-
-    def route_at_rs(pe: int, vc_in: int, from_kind: int, dest: int) -> int:
-        """Next queue for a flit at ring switch ``pe`` (phase-aware)."""
-        pos = pe % pk.PES_PER_RINGLET
-        ringlet = pe // pk.PES_PER_RINGLET
-        if dest // pk.PES_PER_RINGLET == ringlet:
-            dpos = int(d_pos[dest])
-            if dpos == pos:
-                return pe_eject[pe]
-            step = _ring_dir(pos, dpos)
-            if from_kind == R2RS:
-                vc_out = 1                      # down phase
-            elif pos == 0 and from_kind == RING:
-                vc_out = 1                      # crossed the dateline (master)
-            elif from_kind == PE_SRC:
-                vc_out = 0                      # fresh injection, up phase
-            else:
-                vc_out = vc_in                  # keep phase inside the ring
-        else:
-            if pos == 0:                        # master: hand to the router
-                return rs2r[ringlet]
-            step = _ring_dir(pos, 0)
-            vc_out = 0                          # up phase toward the master
-        row = ring_cw if step == 1 else ring_ccw
-        return int(row[pe, vc_out])
-
-    def route_at_router(block: int, dest: int) -> int:
-        """XY dimension-order routing at mesh router ``block`` (§4.1)."""
-        x, y = block % bx, block // bx
-        tx, ty = int(d_bx[dest]), int(d_by[dest])
-        if (x, y) == (tx, ty):
-            ringlet = (block * pk.RINGLETS_PER_BLOCK
-                       + int(d_ringlet_g[dest]) % pk.RINGLETS_PER_BLOCK)
-            return int(r2rs[ringlet])
-        if x != tx:
-            step = (1, 0) if tx > x else (-1, 0)
-        else:
-            step = (0, 1) if ty > y else (0, -1)
-        nbr = (y + step[1]) * bx + (x + step[0])
-        return int(mesh_q[(block, nbr)][mesh_vc(dest)])
+    # Load-balance the two mesh VCs by destination-ringlet parity — the
+    # role of the paper's "dst 00/01 -> VC-0" rule (deadlock-safe: XY).
+    d_mesh_vc = d_ringlet_g % 2
 
     route = np.full((n_links, n_pes), INVALID, np.int32)
     dst_node = np.array(b.dst, np.int32)
     vc_arr = np.array(b.vc, np.int8)
-    for q in range(n_links):
-        node = dst_node[q]
-        if node < 0:
-            continue
-        if node < n_pes:
-            for dest in range(n_pes):
-                route[q, dest] = route_at_rs(int(node), int(vc_arr[q]),
-                                             int(kind[q]), dest)
-        else:
-            block = int(node - n_pes)
-            for dest in range(n_pes):
-                route[q, dest] = route_at_router(block, dest)
+
+    # Rows whose flit sits at a ring switch (phase-aware routing, §4.2).
+    rs_rows = np.nonzero((dst_node >= 0) & (dst_node < n_pes))[0]
+    pe_r = dst_node[rs_rows]
+    vc_r = vc_arr[rs_rows].astype(np.int32)
+    kind_r = kind[rs_rows].astype(np.int32)
+    pos = pe_r % RP
+    ringlet_r = pe_r // RP
+    same = d_ringlet_g[None, :] == ringlet_r[:, None]
+    dpos = np.broadcast_to(d_pos[None, :], same.shape)
+    # same-ringlet: shortest direction (CW on tie, the paper's priority);
+    # VC phase: down after the master RS (dateline), up for fresh traffic.
+    cw = (dpos - pos[:, None]) % RP
+    ccw = (pos[:, None] - dpos) % RP
+    vc_out = np.where(kind_r == R2RS, 1,
+                      np.where((pos == 0) & (kind_r == RING), 1,
+                               np.where(kind_r == PE_SRC, 0, vc_r)))
+    nxt_same = np.where(cw <= ccw,
+                        ring_cw[pe_r, vc_out][:, None],
+                        ring_ccw[pe_r, vc_out][:, None])
+    res_same = np.where(dpos == pos[:, None],
+                        pe_eject[pe_r][:, None], nxt_same)
+    # other ringlet: up-phase toward the master (position 0), which hands
+    # the flit to the block router.
+    to_master = np.where((-pos) % RP <= pos,
+                         ring_cw[pe_r, 0], ring_ccw[pe_r, 0])[:, None]
+    res_rem = np.where(pos[:, None] == 0,
+                       rs2r[ringlet_r][:, None], to_master)
+    route[rs_rows] = np.where(same, res_same, res_rem)
+
+    # Rows whose flit sits at a mesh router: XY dimension-order (§4.1).
+    # The route depends only on (block, dest), so build one table per block
+    # and assign it to every queue entering that router.
+    blocks = np.arange(n_blocks, dtype=np.int32)
+    mesh_next = np.full((n_blocks, 4, 2), INVALID, np.int32)  # E,W,N,S
+    for (a, c), ids in mesh_q.items():
+        dx, dy = c % bx - a % bx, c // bx - a // bx
+        d = 0 if dx > 0 else 1 if dx < 0 else 2 if dy > 0 else 3
+        mesh_next[a, d] = ids
+    x, y = blocks % bx, blocks // bx
+    same_b = d_block[None, :] == blocks[:, None]
+    r2rs_tab = r2rs[(blocks[:, None] * pk.RINGLETS_PER_BLOCK
+                     + d_ringlet_g[None, :] % pk.RINGLETS_PER_BLOCK)]
+    dircode = np.where(x[:, None] != d_bx[None, :],
+                       np.where(d_bx[None, :] > x[:, None], 0, 1),
+                       np.where(d_by[None, :] > y[:, None], 2, 3))
+    nxt_mesh = mesh_next[blocks[:, None], dircode,
+                         np.broadcast_to(d_mesh_vc[None, :], dircode.shape)]
+    router_tab = np.where(same_b, r2rs_tab, nxt_mesh)
+    router_rows = np.nonzero(dst_node >= n_pes)[0]
+    route[router_rows] = router_tab[dst_node[router_rows] - n_pes]
 
     prio = np.array([KIND_PRIORITY[int(k)] for k in kind], np.int32)
     return Topology(
@@ -355,26 +353,29 @@ def build_flat_mesh(n_pes: int, queue_depth: int = 2,
     n_links = len(b.kind)
     kind = np.array(b.kind, np.int8)
 
-    def route_at_router(r: int, dest: int) -> int:
-        x, y = r % rx, r // rx
-        tx, ty = dest % rx, dest // rx
-        if (x, y) == (tx, ty):
-            return int(pe_eject[r])
-        if x != tx:
-            step = (1, 0) if tx > x else (-1, 0)
-        else:
-            step = (0, 1) if ty > y else (0, -1)
-        nbr = (y + step[1]) * rx + (x + step[0])
-        return int(mesh_q[(r, nbr)][dest % 2])
+    # Route depends only on (router, dest): build one [routers, dests]
+    # table vectorized and assign it to every queue entering each router.
+    routers = np.arange(n_pes, dtype=np.int32)
+    mesh_next = np.full((n_pes, 4, 2), INVALID, np.int32)  # E,W,N,S
+    for (a, c), ids in mesh_q.items():
+        dx, dy = c % rx - a % rx, c // rx - a // rx
+        d = 0 if dx > 0 else 1 if dx < 0 else 2 if dy > 0 else 3
+        mesh_next[a, d] = ids
+    x, y = routers % rx, routers // rx
+    dest = np.arange(n_pes, dtype=np.int32)
+    tx, ty = dest % rx, dest // rx
+    dircode = np.where(x[:, None] != tx[None, :],
+                       np.where(tx[None, :] > x[:, None], 0, 1),
+                       np.where(ty[None, :] > y[:, None], 2, 3))
+    vc_sel = np.broadcast_to((dest % 2)[None, :], dircode.shape)
+    router_tab = np.where(routers[:, None] == dest[None, :],
+                          pe_eject[routers][:, None],
+                          mesh_next[routers[:, None], dircode, vc_sel])
 
     route = np.full((n_links, n_pes), INVALID, np.int32)
     dst_node = np.array(b.dst, np.int32)
-    for q in range(n_links):
-        node = dst_node[q]
-        if node < 0:
-            continue
-        for dest in range(n_pes):
-            route[q, dest] = route_at_router(int(node), dest)
+    rows = np.nonzero(dst_node >= 0)[0]
+    route[rows] = router_tab[dst_node[rows]]
 
     prio = np.array([KIND_PRIORITY[int(k)] for k in kind], np.int32)
     return Topology(

@@ -89,6 +89,22 @@ def test_single_packet_block_transaction_latency():
     assert r.avg_latency <= 8.0
 
 
+def test_kind_diagnostics_consistent():
+    """Optional per-kind instrumentation agrees with the main counters:
+    wins sum to measured link traversals, final occupancy to in_flight."""
+    t = topology.build_ring_mesh(16)
+    cfg = sim.SimConfig(cycles=500, warmup=0, inj_rate=0.5, seed=4)
+    d = sim.kind_diagnostics(t, cfg)
+    r = sim.simulate(t, cfg)
+    moved = r.flit_hops_per_cycle * r.measured_cycles
+    assert sum(d["wins_by_kind"].values()) == round(moved)
+    assert sum(d["q_len_by_kind"].values()) == r.in_flight
+    # wins are keyed by the *winning* queue's kind; eject queues are pure
+    # sinks and never contend
+    assert d["wins_by_kind"]["eject"] == 0
+    assert all(v >= 0 for sub in d.values() for v in sub.values())
+
+
 def test_patterns_are_fixed_permutations():
     perm = sim.pattern_destinations("transpose", 64)
     assert sorted(perm.tolist()) == list(range(64))

@@ -1,0 +1,116 @@
+"""Sweep-engine tests: bit-exact equivalence with single-run simulate(),
+conservation over the extended traffic patterns, grouping, compile reuse."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import sim, sweep, topology
+
+GRID = [(16, "ring_mesh"), (16, "flat_mesh"), (64, "ring_mesh"),
+        (64, "flat_mesh")]
+
+
+def _topo(name, n):
+    return topology.build(name, n)
+
+
+@pytest.mark.parametrize("n,name", GRID)
+def test_sweep_matches_simulate_bitforbit(n, name):
+    """The vmapped batch must reproduce per-point simulate() *exactly*:
+    every metric is an integer accumulator, so there is no reduction-order
+    slack to hide behind — all patterns, two rates/seeds per pattern."""
+    t = _topo(name, n)
+    cfgs = [sim.SimConfig(cycles=400, warmup=100, inj_rate=ir, pattern=p,
+                          seed=s, locality_ringlet=lr, locality_block=lb)
+            for p in sim.PATTERNS
+            for (ir, s, lr, lb) in ((0.25, 0, 0.0, 0.0),
+                                    (0.9, 3, 0.5, 0.3))]
+    batched = sweep.sweep(t, cfgs)
+    for cfg, rb in zip(cfgs, batched):
+        rs = sim.simulate(t, cfg)
+        assert rs == rb, (cfg.pattern, cfg.inj_rate, rs.row(), rb.row())
+
+
+def test_sweep_mixed_budgets_group_and_preserve_order():
+    t = _topo("ring_mesh", 16)
+    cfgs = [sim.SimConfig(cycles=300, warmup=100, inj_rate=0.3, seed=1),
+            sim.SimConfig(cycles=200, warmup=50, inj_rate=0.4, seed=2),
+            sim.SimConfig(cycles=300, warmup=100, inj_rate=0.6, seed=3)]
+    rs = sweep.sweep(t, cfgs)
+    assert [r.cfg for r in rs] == cfgs
+    for cfg, r in zip(cfgs, rs):
+        assert r == sim.simulate(t, cfg)
+
+
+def test_sweep_empty():
+    assert sweep.sweep(_topo("ring_mesh", 16), []) == []
+
+
+def test_sweep_compile_reuse_across_points():
+    """Rates / seeds / patterns / localities are traced: re-sweeping a
+    different grid of the same shape must not add executables."""
+    t = _topo("flat_mesh", 16)
+    g1 = sweep.grid(inj_rates=(0.2, 0.8), patterns=("uniform", "tornado"),
+                    seeds=(0,), cycles=250, warmup=50)
+    sweep.sweep(t, g1)
+    before = sweep.compile_stats()["batch_xla_compiles"]
+    g2 = sweep.grid(inj_rates=(0.3, 0.9), patterns=("hotspot", "shuffle"),
+                    seeds=(7,), cycles=250, warmup=50,
+                    locality_ringlet=0.4)
+    sweep.sweep(t, g2)
+    assert sweep.compile_stats()["batch_xla_compiles"] == before
+
+
+@pytest.mark.parametrize("pattern", ["shuffle", "tornado", "hotspot"])
+@pytest.mark.parametrize("name", ["ring_mesh", "flat_mesh"])
+def test_conservation_new_patterns(name, pattern):
+    """Flit conservation with warmup=0: every offered packet is delivered,
+    dropped, or still queued; the exactness guard stays silent."""
+    t = _topo(name, 64)
+    r = sim.simulate(t, sim.SimConfig(cycles=600, warmup=0, inj_rate=0.9,
+                                      pattern=pattern, seed=2))
+    assert r.lost == 0
+    assert r.offered == r.delivered + r.dropped + r.in_flight
+
+
+def test_new_patterns_are_valid_maps():
+    for pat in ("shuffle", "tornado"):
+        perm = sim.pattern_destinations(pat, 64)
+        assert sorted(perm.tolist()) == list(range(64))  # permutations
+    # tornado's constant offset never maps a node to itself; shuffle keeps
+    # the classic fixed points (0 and all-ones rotate onto themselves)
+    tor = sim.pattern_destinations("tornado", 64)
+    assert not np.any(tor == np.arange(64))
+    hot = sim.pattern_destinations("hotspot", 64)
+    assert np.all(hot[np.arange(64) != 32] == 32)
+    assert hot[32] != 32
+
+
+def test_sweep_many_pipelines_match():
+    tasks = [(_topo("ring_mesh", 16),
+              sweep.grid(inj_rates=(0.25, 0.75), cycles=250, warmup=50)),
+             (_topo("flat_mesh", 16),
+              sweep.grid(inj_rates=(0.5,), patterns=("transpose",),
+                         cycles=250, warmup=50))]
+    many = sweep.sweep_many(tasks)
+    for (topo, cfgs), res in zip(tasks, many):
+        assert res == sweep.sweep(topo, cfgs)
+
+
+def test_geometry_morph_aware():
+    """build_geometry must re-read the route table so in-place morphs
+    (switched-off links) take effect without rebuilding the topology."""
+    from repro.core import morph, packet
+    t = topology.build_ring_mesh(16)
+    cfg = sim.SimConfig(cycles=300, warmup=100, inj_rate=0.2, seed=0)
+    before = sim.simulate(t, cfg)
+    ctl = morph.MorphController(t)
+    ctl.apply(packet.MorphPacket(hl=1, ers=0,
+                                 link_states=(0, 0, 0, 0, 2, 0, 0, 0)),
+              target=0)  # switch ringlet 0 of block 0 off
+    after = sim.simulate(t, cfg)
+    assert after.dropped > before.dropped
+    ctl.reset()
+    restored = sim.simulate(t, cfg)
+    assert restored == before
