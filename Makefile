@@ -1,20 +1,33 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: collect test test-dist dryrun-smoke bench-quick
+.PHONY: collect test test-dist dryrun-smoke bench-quick lint
 
-# Fast regression gate: every test module must import (a missing module
-# fails here in ~1s instead of minutes into the full suite), and the
-# benchmark harness must import so bench regressions fail fast too.
-collect:
+# Lint gate (pinned config: ruff.toml).  ruff is optional in the
+# container; skip cleanly when `python -m ruff` is absent rather than
+# failing collect on a missing tool.
+lint:
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not installed; skipping lint (config: ruff.toml)"; \
+	fi
+
+# Fast regression gate: lint, then every test module must import (a
+# missing module fails here in ~1s instead of minutes into the full
+# suite), and the benchmark harness must import so bench regressions
+# fail fast too.
+collect: lint
 	$(PY) -m pytest --collect-only -q
 	$(PY) -c "import benchmarks.run, benchmarks.noc_tables, \
 	          benchmarks.serial_baseline, benchmarks.kernel_micro"
 
-# CI-sized benchmark: small sweep grids + the sweep-equivalence tests.
+# CI-sized benchmark: small sim grids (including the experiment_grid_smoke
+# table — one Experiment.run_grid over the collective + weighted-hotspot
+# registry specs) + the sweep/experiment equivalence tests.
 bench-quick:
 	$(PY) -m benchmarks.run --quick --terse --no-baseline
-	$(PY) -m pytest -q tests/test_sweep.py
+	$(PY) -m pytest -q tests/test_sweep.py tests/test_experiment.py
 
 test: collect
 	$(PY) -m pytest -x -q

@@ -3,31 +3,31 @@
 Each function returns (rows, derived) where rows are dicts for CSV-ish
 printing and derived is the headline number compared against the paper.
 
-The simulation tables run on the batched sweep engine (``core.sweep``):
-topologies are built once and cached, each (size, topology) grid executes
-as one vmapped dispatch, and XLA compilation for the next geometry is
-pipelined behind the current dispatch.  ``benchmarks.serial_baseline``
-holds the frozen seed path these timings are compared against.
+The simulation tables run through the declarative experiment API
+(``core.experiment`` over ``core.spec`` / ``core.traffic``), which rides
+the batched sweep engine: geometries are memoized on their TopologySpec,
+each (size, topology) grid executes as one vmapped dispatch, and XLA
+compilation for the next geometry is pipelined behind the current
+dispatch.  ``benchmarks.serial_baseline`` holds the frozen seed path
+these timings are compared against.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import analytic, area, packet, power, sim, sweep, topology
+from repro.core import analytic, area, power, sim, traffic
+from repro.core.experiment import Budget, Experiment, Report, run_experiments
+from repro.core.spec import TopologySpec
 
 PATTERNS = ("uniform", "bit_reversal", "transpose")
 IR = (0.25, 0.50, 0.75, 1.00)
 
-_TOPO_CACHE: dict = {}
 _SWEEP_CACHE: dict = {}
 
 
-def _topo(name: str, n: int, src_queue_depth: int = 8):
-    key = (name, n, src_queue_depth)
-    if key not in _TOPO_CACHE:
-        _TOPO_CACHE[key] = topology.build(name, n,
-                                          src_queue_depth=src_queue_depth)
-    return _TOPO_CACHE[key]
+def _spec(name: str, n: int, src_queue_depth: int = 8) -> TopologySpec:
+    return TopologySpec(family=name, n_pes=n,
+                        src_queue_depth=src_queue_depth)
 
 
 def clear_sweep_cache() -> None:
@@ -37,14 +37,16 @@ def clear_sweep_cache() -> None:
 
 
 def _sim(topo_name, n, ir, pattern, cycles=1200, warmup=400, seed=1):
-    cfg = sim.SimConfig(cycles=cycles, warmup=warmup, inj_rate=ir,
-                        pattern=pattern, seed=seed, **sim.PAPER_LOCALITY)
-    return sim.simulate(_topo(topo_name, n), cfg)
+    exp = Experiment(topology=_spec(topo_name, n),
+                     traffic=traffic.spec(pattern, **sim.PAPER_LOCALITY),
+                     budget=Budget(cycles=cycles, warmup=warmup),
+                     inj_rate=ir, seed=seed)
+    return exp.run().sim
 
 
 def _rate_pattern_sweep(sizes, rates, patterns, cycles, warmup,
                         locality=None):
-    """One batched sweep per (size, topology) over rates x patterns.
+    """One batched dispatch per (size, topology) over rates x patterns.
     Returns {(n, topo_name, ir, pattern): SimResult}.
 
     ``locality`` defaults to the paper's operating regime; pass an empty
@@ -58,17 +60,19 @@ def _rate_pattern_sweep(sizes, rates, patterns, cycles, warmup,
                  tuple(sorted(locality.items())))
     if cache_key in _SWEEP_CACHE:
         return _SWEEP_CACHE[cache_key]
-    tasks, keys = [], []
+    budget = Budget(cycles=cycles, warmup=warmup)
+    exps, keys = [], []
     for n in sizes:
         for topo_name in ("ring_mesh", "flat_mesh"):
-            cfgs = sweep.grid(inj_rates=rates, patterns=patterns, seeds=(1,),
-                              cycles=cycles, warmup=warmup, **locality)
-            tasks.append((_topo(topo_name, n), cfgs))
-            keys.append((n, topo_name, cfgs))
-    results = {}
-    for (n, topo_name, cfgs), res in zip(keys, sweep.sweep_many(tasks)):
-        for cfg, r in zip(cfgs, res):
-            results[(n, topo_name, cfg.inj_rate, cfg.pattern)] = r
+            for ir in rates:
+                for p in patterns:
+                    exps.append(Experiment(
+                        topology=_spec(topo_name, n),
+                        traffic=traffic.spec(p, **locality),
+                        budget=budget, inj_rate=ir, seed=1))
+                    keys.append((n, topo_name, ir, p))
+    results = {k: rep.sim
+               for k, rep in zip(keys, run_experiments(exps))}
     _SWEEP_CACHE[cache_key] = results
     return results
 
@@ -217,11 +221,11 @@ def paper_validation():
         rows.append({"claim": cid, "description": desc, "ours": ours,
                      "paper": paper, "status": "PASS" if ok else "DEVIATION"})
 
-    d = analytic.measured_diameter(topology.build_ring_mesh(64))
+    d = analytic.measured_diameter(TopologySpec("ring_mesh", 64).build())
     check("C1", "diameter formula N_R+N_C+6", d,
           analytic.ring_mesh_diameter(64),
           d == analytic.ring_mesh_diameter(64))
-    cut = analytic.mesh_cut_links(topology.build_ring_mesh(256))
+    cut = analytic.mesh_cut_links(TopologySpec("ring_mesh", 256).build())
     check("C2", "bisection = min(N_R,N_C)*b_l", cut, 4, cut == 4)
     s = area.saving_vs_conventional(1024)
     check("C3", "area saving pts @1024 (lut/ff/bram)",
@@ -245,9 +249,29 @@ def paper_validation():
     check("C7", "worst latency at transpose Ir=1.0",
           f"{lat_t:.1f} > {lat_u:.1f}", "transpose@1.0 worst",
           lat_t > lat_u)
-    t16 = topology.build_ring_mesh(16)
+    t16 = TopologySpec("ring_mesh", 16).build()
     worst = max(t16.hops(s_, d_) for s_ in range(16) for d_ in range(16)
                 if s_ != d_)
     check("C8", "block transaction <= 12 cycles (one-way hops<=6)",
           worst, 6, worst <= 6)
     return rows, f"{sum(r['status'] == 'PASS' for r in rows)}/8 claims PASS"
+
+
+def experiment_grid_smoke():
+    """Registry-path smoke (runs in `make bench-quick` / CI): one
+    ``Experiment.run_grid`` over pluggable specs — the collective
+    ring-allreduce phase and a weighted two-sink hotspot — plus a Report
+    JSON round trip, so the declarative API path is exercised end to
+    end."""
+    exp = Experiment(topology=TopologySpec("ring_mesh", 16),
+                     budget=Budget(cycles=400, warmup=100), inj_rate=0.5)
+    specs = ("uniform", traffic.Collective(),
+             traffic.Hotspot(sinks=((0, 1.0), (5, 2.0))))
+    reports = exp.run_grid(traffics=specs)
+    assert all(r.sim.lost == 0 for r in reports), "conservation violated"
+    rt = Report.from_json(reports[1].to_json())
+    assert rt == reports[1], "Report JSON round-trip mismatch"
+    rows = [r.row() for r in reports]
+    return rows, (f"collective lat={rows[1]['avg_latency']} "
+                  f"thr={rows[1]['throughput']} (registry + report "
+                  f"round-trip OK)")

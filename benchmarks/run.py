@@ -100,6 +100,8 @@ def main() -> None:
          {"sizes": sizes}, False),
         ("figs_extended_patterns", noc_tables.figs_extended_patterns,
          {"sizes": (16, 64)}, True),
+        ("experiment_grid_smoke", noc_tables.experiment_grid_smoke,
+         {}, False),
         ("paper_validation_c1_c8", noc_tables.paper_validation, {}, False),
     ]
 

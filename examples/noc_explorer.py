@@ -1,17 +1,25 @@
-"""NoC explorer: the paper's experiment in four acts.
+"""NoC explorer: the paper's experiment in four acts, on the declarative
+experiment API (``TopologySpec`` / ``TrafficSpec`` / ``Experiment``).
 
     PYTHONPATH=src python examples/noc_explorer.py
 
-1. Ring-mesh vs flat 2D-mesh at increasing sizes (latency / throughput /
-   power) under the paper's locality-heavy operating regime — executed as
-   pipelined batched sweeps (``core.sweep``), not point-by-point.
-2. Saturation sweep: injection rate ramp on a 64-PE ring-mesh, the whole
-   ramp as one vmapped device execution.
-3. Adversarial patterns: shuffle / tornado / hotspot on one batch axis.
-4. Morphing: switch a ringlet off with an in-band morph packet, watch the
-   traffic drop and the rest of the fabric keep routing; then reset.
+1. Ring-mesh vs flat 2D-mesh at increasing sizes — one Experiment per
+   (size, family); each Report joins latency/throughput with the power
+   and area models, so no separate model calls are needed.
+2. Saturation sweep: injection-rate ramp on a 64-PE ring-mesh — one
+   ``run_grid`` call, one vmapped device execution.
+3. Pluggable traffic: legacy adversarial patterns next to the registry's
+   collective (ring-allreduce phase) and weighted-hotspot specs, all on
+   one batch axis.
+4. Morphing, twice: declaratively (a TopologySpec with a morph overlay)
+   and in-band (a MorphController applying an escaped morph packet) —
+   both must agree.
 """
-from repro.core import analytic, area, morph, packet, power, sim, sweep, topology
+from repro.core import morph, packet, sim, traffic
+from repro.core.experiment import Budget, Experiment, run_experiments
+from repro.core.spec import MorphOverlay, TopologySpec
+
+PAPER_REGIME = traffic.spec("uniform", **sim.PAPER_LOCALITY)
 
 
 def act1_compare(sizes=(16, 64, 256)):
@@ -19,69 +27,86 @@ def act1_compare(sizes=(16, 64, 256)):
           "(Ir=0.625, paper locality) ==")
     print(f"{'PEs':>5} {'topology':>10} {'latency':>8} {'thr':>7} "
           f"{'power(W)':>9} {'LUTs':>8}")
-    cfg = sim.SimConfig(cycles=1000, warmup=300, inj_rate=0.625,
-                        pattern="uniform", seed=0, **sim.PAPER_LOCALITY)
-    topos = [topology.build(name, n, src_queue_depth=8)
-             for n in sizes for name in ("ring_mesh", "flat_mesh")]
-    results = sweep.sweep_many([(t, [cfg]) for t in topos])
-    for t, (r,) in zip(topos, results):
-        p = power.power(t)
-        a = area.area(t)
-        name = t.name.rsplit("_", 1)[0]
-        print(f"{t.n_pes:>5} {name:>10} {r.avg_latency:>8.1f} "
-              f"{r.throughput:>7.1f} {p.total_w:>9.2f} {a.lut:>8}")
+    exps = [Experiment(topology=TopologySpec(family=name, n_pes=n,
+                                             src_queue_depth=8),
+                       traffic=PAPER_REGIME,
+                       budget=Budget(cycles=1000, warmup=300),
+                       inj_rate=0.625)
+            for n in sizes for name in ("ring_mesh", "flat_mesh")]
+    for rep in run_experiments(exps):
+        print(f"{rep.sim.n_pes:>5} {rep.experiment.topology.family:>10} "
+              f"{rep.sim.avg_latency:>8.1f} {rep.sim.throughput:>7.1f} "
+              f"{rep.power.total_w:>9.2f} {rep.area.lut:>8}")
 
 
 def act2_saturation(n=64):
     print(f"\n== Act 2: saturation ramp on {n}-PE ring-mesh "
-          "(one vmapped sweep) ==")
-    t = topology.build_ring_mesh(n, src_queue_depth=8)
+          "(one vmapped run_grid) ==")
+    exp = Experiment(topology=TopologySpec("ring_mesh", n,
+                                           src_queue_depth=8),
+                     traffic=PAPER_REGIME,
+                     budget=Budget(cycles=1000, warmup=300))
     rates = (0.1, 0.25, 0.5, 0.75, 1.0)
-    results = sweep.sweep_grid(t, inj_rates=rates, patterns=("uniform",),
-                               seeds=(0,), cycles=1000, warmup=300,
-                               **sim.PAPER_LOCALITY)
-    for ir, r in zip(rates, results):
+    for ir, rep in zip(rates, exp.run_grid(inj_rates=rates)):
+        r = rep.sim
         bar = "#" * int(40 * r.per_pe_throughput)
         print(f"  Ir={ir:4.2f}  thr/PE={r.per_pe_throughput:5.3f} "
               f"lat={r.avg_latency:6.1f}  {bar}")
 
 
 def act3_patterns(n=64):
-    print(f"\n== Act 3: adversarial patterns on {n}-PE ring-mesh ==")
-    t = topology.build_ring_mesh(n, src_queue_depth=8)
-    pats = ("uniform", "transpose", "shuffle", "tornado", "hotspot")
-    results = sweep.sweep_grid(t, inj_rates=(0.5,), patterns=pats,
-                               seeds=(0,), cycles=1000, warmup=300)
-    for pat, r in zip(pats, results):
-        print(f"  {pat:>12}  lat={r.avg_latency:6.1f} "
+    print(f"\n== Act 3: pluggable traffic on {n}-PE ring-mesh ==")
+    specs = ("uniform", "transpose", "shuffle", "tornado", "hotspot",
+             traffic.Hotspot(sinks=((0, 1.0), (n - 1, 1.0))),
+             traffic.Collective(algorithm="ring_allreduce"),
+             traffic.Collective(algorithm="halving_doubling", phase=2))
+    labels = ("uniform", "transpose", "shuffle", "tornado", "hotspot",
+              "hotspot[2 sinks]", "ring-allreduce", "halving-doubling")
+    exp = Experiment(topology=TopologySpec("ring_mesh", n,
+                                           src_queue_depth=8),
+                     budget=Budget(cycles=1000, warmup=300), inj_rate=0.5)
+    for label, rep in zip(labels, exp.run_grid(traffics=specs)):
+        r = rep.sim
+        print(f"  {label:>16}  lat={r.avg_latency:6.1f} "
               f"thr/PE={r.per_pe_throughput:5.3f} dropped={r.dropped} "
               f"lost={r.lost}")
 
 
 def act4_morphing(n=64):
     print(f"\n== Act 4: morphing (switch ringlet 0 of block 0 off) ==")
-    t = topology.build_ring_mesh(n)
-    ctl = morph.MorphController(t)
-    cfg = sim.SimConfig(cycles=600, warmup=200, inj_rate=0.2,
-                        pattern="uniform", seed=0)
-    before = sim.simulate(t, cfg)
-    print(f"  before: delivered={before.delivered} dropped={before.dropped}")
+    budget = Budget(cycles=600, warmup=200)
+    base = TopologySpec("ring_mesh", n)
+    dark = TopologySpec("ring_mesh", n, morphs=(
+        MorphOverlay(hl=1, target=0, link_states=(0, 0, 0, 0, 2, 0, 0, 0)),))
+    before, after = run_experiments(
+        [Experiment(topology=s, budget=budget, inj_rate=0.2)
+         for s in (base, dark)])
+    print(f"  before: delivered={before.sim.delivered} "
+          f"dropped={before.sim.dropped}")
+    print(f"  after : delivered={after.sim.delivered} "
+          f"dropped={after.sim.dropped} "
+          f"(drops = traffic into the dark ringlet)")
 
-    # encode the morph packet exactly as it would ride the NoC (§5.1)
+    # The same morph as it would ride the NoC in-band (§5.1): encode the
+    # morph packet, unescape it off the wire, apply via the controller.
+    t = base.build_fresh()
+    ctl = morph.MorphController(t)
     m = packet.MorphPacket(hl=1, ers=0,
                            link_states=(0, 0, 0, 0, 2, 0, 0, 0))
     wire = packet.escape_stream([("morph", m.encode())])
     kind, payload = packet.unescape_stream(wire)[0]
     assert kind == "morph"
     ctl.apply_payload(payload, target=0)
-    after = sim.simulate(t, cfg)
-    print(f"  after : delivered={after.delivered} dropped={after.dropped} "
-          f"(drops = traffic into the dark ringlet)")
+    inband = sim.simulate(t, Experiment(topology=base, budget=budget,
+                                        inj_rate=0.2).sim_config())
+    assert inband.delivered == after.sim.delivered, \
+        "declarative overlay and in-band morph packet must agree"
     ctl.reset()
-    restored = sim.simulate(t, cfg)
+    restored = sim.simulate(t, Experiment(topology=base, budget=budget,
+                                          inj_rate=0.2).sim_config())
     print(f"  reset : delivered={restored.delivered} "
           f"dropped={restored.dropped}")
-    assert restored.delivered == before.delivered
+    assert restored.delivered == before.sim.delivered
 
 
 def main():

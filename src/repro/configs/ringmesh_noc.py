@@ -1,6 +1,12 @@
 """The paper's own artifact: Ring-Mesh NoC experiment configuration
-(§7 experimental grid). Used by benchmarks/ and examples/noc_explorer.py."""
+(§7 experimental grid), expressed against the declarative experiment API
+(``core.spec`` / ``core.traffic`` / ``core.experiment``).  Used by
+benchmarks/ and examples/noc_explorer.py."""
 import dataclasses
+
+from repro.core import traffic
+from repro.core.experiment import Budget, Experiment
+from repro.core.spec import TopologySpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -15,6 +21,38 @@ class NoCExperimentConfig:
     # paper operating regime (§1/§3): most traffic confined to rings
     locality_ringlet: float = 0.75
     locality_block: float = 0.20
+
+    # -- declarative views --------------------------------------------------
+    def topology_spec(self, family: str, n_pes: int) -> TopologySpec:
+        return TopologySpec(family=family, n_pes=n_pes,
+                            queue_depth=self.queue_depth,
+                            src_queue_depth=self.src_queue_depth)
+
+    def budget(self) -> Budget:
+        return Budget(cycles=self.cycles, warmup=self.warmup)
+
+    def traffic_specs(self) -> tuple:
+        """The §7 patterns under the paper's locality-heavy regime."""
+        return tuple(
+            traffic.spec(p, locality_ringlet=self.locality_ringlet,
+                         locality_block=self.locality_block)
+            for p in self.patterns)
+
+    def experiments(self, sizes=None,
+                    families=("ring_mesh", "flat_mesh"),
+                    seed: int = 1) -> list[Experiment]:
+        """The full §7 grid as Experiment objects — run them with
+        ``experiment.run_experiments`` (batched per geometry)."""
+        budget = self.budget()
+        traffics = self.traffic_specs()
+        return [
+            Experiment(topology=self.topology_spec(f, n), traffic=t,
+                       budget=budget, inj_rate=ir, seed=seed)
+            for n in (sizes if sizes is not None else self.sizes)
+            for f in families
+            for ir in self.injection_rates
+            for t in traffics
+        ]
 
 
 CONFIG = NoCExperimentConfig()

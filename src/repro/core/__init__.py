@@ -3,21 +3,31 @@
 Public surface:
     packet     — 43-bit single-flit codec + morph packets + escape protocol
     topology   — ring-mesh & flat-mesh link graphs + static route tables
+    spec       — declarative TopologySpec (family/size/depths/morph overlays)
+    traffic    — pluggable TrafficSpec registry (destination maps + locality)
     sim        — vectorized cycle-level simulator (lax.scan)
     sweep      — batched sweep engine (vmapped grids, one compile/geometry)
+    experiment — Experiment/Report: declarative runs, unified JSON reports
     analytic   — diameter / bisection closed forms (§6)
     area       — FPGA resource model (Tables 2-3)
     power      — power model (Table 2, Figs 7-8)
     morph      — dynamic reconfiguration (§5)
 """
-from repro.core import analytic, area, morph, packet, power, sim, sweep, topology
+from repro.core import (analytic, area, experiment, morph, packet, power,
+                        sim, spec, sweep, topology, traffic)
+from repro.core.experiment import (AnalyticBounds, Budget, Experiment,
+                                   Report, run_experiments)
 from repro.core.sim import (PAPER_LOCALITY, PATTERNS, SimConfig, SimResult,
                             simulate)
+from repro.core.spec import MorphOverlay, TopologySpec
 from repro.core.topology import Topology, build, build_flat_mesh, build_ring_mesh
+from repro.core.traffic import TrafficSpec
 
 __all__ = [
-    "analytic", "area", "morph", "packet", "power", "sim", "sweep",
-    "topology",
+    "analytic", "area", "experiment", "morph", "packet", "power", "sim",
+    "spec", "sweep", "topology", "traffic",
+    "AnalyticBounds", "Budget", "Experiment", "Report", "run_experiments",
     "PAPER_LOCALITY", "PATTERNS", "SimConfig", "SimResult", "simulate",
+    "MorphOverlay", "TopologySpec", "TrafficSpec",
     "Topology", "build", "build_flat_mesh", "build_ring_mesh",
 ]

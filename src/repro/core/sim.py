@@ -36,7 +36,7 @@ cycle) is asserted at trace time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,11 @@ import numpy as np
 
 from repro.core import packet as pk
 from repro.core import topology as topo_mod
+from repro.core import traffic
 
+# Legacy string patterns — deprecation shims over the ``core.traffic``
+# registry (new code passes TrafficSpec instances; these strings resolve
+# to the default-constructed spec of the same kind, bit-identically).
 UNIFORM = "uniform"
 BIT_REVERSAL = "bit_reversal"
 TRANSPOSE = "transpose"
@@ -67,17 +71,38 @@ class SimConfig:
     cycles: int = 2000
     warmup: int = 500
     inj_rate: float = 0.25
-    pattern: str = UNIFORM
+    pattern: Union[str, traffic.TrafficSpec] = UNIFORM
     locality_ringlet: float = 0.0
     locality_block: float = 0.0
     seed: int = 0
     starvation_limit: int = 8
 
     def __post_init__(self):
-        if self.pattern not in PATTERNS:
-            raise ValueError(f"unknown pattern {self.pattern!r}")
+        if not 0.0 <= self.inj_rate <= 1.0:
+            raise ValueError(
+                f"inj_rate must be in [0, 1], got {self.inj_rate}")
+        if self.cycles <= 0:
+            raise ValueError(f"cycles must be > 0, got {self.cycles}")
+        if not 0 <= self.warmup < self.cycles:
+            raise ValueError(
+                f"warmup must satisfy 0 <= warmup < cycles, got "
+                f"warmup={self.warmup} cycles={self.cycles}")
+        traffic.resolve(self.pattern)  # raises on unknown pattern strings
         if not 0 <= self.locality_ringlet + self.locality_block <= 1:
             raise ValueError("locality fractions must sum to <= 1")
+        if isinstance(self.pattern, traffic.TrafficSpec) and (
+                self.locality_ringlet or self.locality_block):
+            raise ValueError(
+                "locality is declared on the TrafficSpec when one is "
+                "passed as `pattern`; leave SimConfig's locality at 0")
+
+    def effective_locality(self) -> tuple[float, float]:
+        """(ringlet, block) fractions that drive traffic generation: the
+        spec's when ``pattern`` is a TrafficSpec, else this config's."""
+        if isinstance(self.pattern, traffic.TrafficSpec):
+            return (self.pattern.locality_ringlet,
+                    self.pattern.locality_block)
+        return self.locality_ringlet, self.locality_block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +125,8 @@ class SimResult:
     def row(self) -> dict:
         return {
             "topology": self.topology, "n_pes": self.n_pes,
-            "pattern": self.cfg.pattern, "inj_rate": self.cfg.inj_rate,
+            "pattern": traffic.name_of(self.cfg.pattern),
+            "inj_rate": self.cfg.inj_rate,
             "avg_latency": round(self.avg_latency, 2),
             "throughput": round(self.throughput, 3),
             "per_pe_throughput": round(self.per_pe_throughput, 4),
@@ -111,34 +137,11 @@ class SimResult:
         }
 
 
-def pattern_destinations(pattern: str, n_pes: int) -> Optional[np.ndarray]:
-    """Fixed destination map, or None for uniform-random.
-
-    All patterns except ``hotspot`` are permutations; ``hotspot`` is the
-    classic many-to-one stress pattern (every PE targets the center PE).
-    """
-    if pattern == UNIFORM:
-        return None
-    src = np.arange(n_pes)
-    if pattern == TORNADO:
-        # Dally & Towles: each node sends (almost) half-way around.
-        return ((src + max(1, n_pes // 2 - 1)) % n_pes).astype(np.int32)
-    if pattern == HOTSPOT:
-        hot = n_pes // 2
-        dst = np.full(n_pes, hot, np.int32)
-        dst[hot] = 0  # the hotspot itself targets PE 0
-        return dst
-    bits = int(np.log2(n_pes))
-    assert (1 << bits) == n_pes, "pattern sizes must be powers of two"
-    if pattern == BIT_REVERSAL:
-        return pk.bitreverse(src, bits).astype(np.int32)
-    if pattern == TRANSPOSE:
-        return pk.transpose_perm(src, bits).astype(np.int32)
-    if pattern == SHUFFLE:
-        # Perfect shuffle: rotate the address left by one bit.
-        return (((src << 1) | (src >> (bits - 1))) & (n_pes - 1)).astype(
-            np.int32)
-    raise ValueError(pattern)
+def pattern_destinations(pattern: Union[str, traffic.TrafficSpec],
+                         n_pes: int) -> Optional[np.ndarray]:
+    """Deprecation shim: fixed destination map (None = uniform-random).
+    Destination-map generation lives in the ``core.traffic`` registry."""
+    return traffic.resolve(pattern).destinations(n_pes)
 
 
 # ---------------------------------------------------------------------------
@@ -190,15 +193,29 @@ jax.tree_util.register_dataclass(
 
 
 def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
-    """Host-side SweepPoint for one SimConfig."""
-    perm = pattern_destinations(cfg.pattern, n_pes)
+    """Host-side SweepPoint for one SimConfig (pattern strings and
+    TrafficSpec instances both resolve through the traffic registry)."""
+    spec = traffic.resolve(cfg.pattern)
+    perm = spec.destinations(n_pes)
     use_perm = perm is not None
     if perm is None:
         perm = np.zeros((n_pes,), np.int32)
+    else:
+        perm = np.asarray(perm)
+        if (perm.shape != (n_pes,)
+                or not np.issubdtype(perm.dtype, np.integer)
+                or perm.min() < 0 or perm.max() >= n_pes):
+            raise ValueError(
+                f"traffic spec {traffic.name_of(spec)!r} produced an invalid "
+                f"destination map for {n_pes} PEs "
+                f"(shape {perm.shape}, dtype {perm.dtype}); expected int "
+                f"[{n_pes}] with entries in [0, {n_pes})")
+        perm = perm.astype(np.int32)
+    loc_ring, loc_block = cfg.effective_locality()
     return SweepPoint(
         inj_rate=np.float32(cfg.inj_rate),
-        loc_ring=np.float32(cfg.locality_ringlet),
-        loc_block=np.float32(cfg.locality_block),
+        loc_ring=np.float32(loc_ring),
+        loc_block=np.float32(loc_block),
         seed=np.int32(cfg.seed),
         use_perm=np.bool_(use_perm),
         perm_dst=np.asarray(perm, np.int32),
@@ -553,6 +570,19 @@ _run_single = jax.jit(
     _run_core,
     static_argnames=("cycles", "warmup", "starvation_limit", "arb_iters",
                      "diagnostics"))
+
+
+def compile_cache_size() -> int:
+    """Number of compiled single-point executables held by ``simulate``.
+    Public counterpart of the private jit internals, used by
+    ``sweep.compile_stats()`` and by tests asserting compile reuse."""
+    return int(_run_single._cache_size())
+
+
+def clear_compile_cache() -> None:
+    """Drop the compiled single-point executables (tests use this to reset
+    compile counters between cases; the next ``simulate`` recompiles)."""
+    _run_single.clear_cache()
 
 
 def _to_result(topo: topo_mod.Topology, cfg: SimConfig,

@@ -25,17 +25,18 @@ the one-compile-per-geometry property (logged into BENCH_noc.json).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sim
 from repro.core import topology as topo_mod
+from repro.core import traffic
 
 
 @functools.partial(
@@ -168,19 +169,38 @@ def sweep_many(tasks: Sequence[tuple[topo_mod.Topology,
 
 
 def grid(inj_rates: Iterable[float] = (0.25,),
-         patterns: Iterable[str] = (sim.UNIFORM,),
+         patterns: Iterable = (sim.UNIFORM,),
          seeds: Iterable[int] = (0,),
          cycles: int = 1200, warmup: int = 400,
          locality_ringlet: float = 0.0, locality_block: float = 0.0,
          starvation_limit: int = 8) -> list[sim.SimConfig]:
-    """Cross-product config grid (rate-major, then pattern, then seed)."""
-    return [
-        sim.SimConfig(cycles=cycles, warmup=warmup, inj_rate=ir, pattern=p,
-                      seed=s, locality_ringlet=locality_ringlet,
-                      locality_block=locality_block,
-                      starvation_limit=starvation_limit)
-        for ir in inj_rates for p in patterns for s in seeds
-    ]
+    """Cross-product config grid (rate-major, then pattern, then seed).
+    ``patterns`` accepts legacy strings and ``traffic.TrafficSpec``
+    instances alike; the locality kwargs describe the grid's regime and
+    are folded into specs that don't declare their own (declaring both
+    is an error)."""
+    patterns = tuple(patterns)  # seeds/patterns are re-iterated per rate:
+    seeds = tuple(seeds)        # materialize so one-shot iterators work
+    cfgs = []
+    for ir in inj_rates:
+        for p in patterns:
+            lr, lb = locality_ringlet, locality_block
+            if isinstance(p, traffic.TrafficSpec) and (lr or lb):
+                if p.locality_ringlet or p.locality_block:
+                    raise ValueError(
+                        "locality declared both on grid() and on the "
+                        f"TrafficSpec {traffic.name_of(p)!r}")
+                p = dataclasses.replace(p, locality_ringlet=lr,
+                                        locality_block=lb)
+            if isinstance(p, traffic.TrafficSpec):
+                lr = lb = 0.0
+            cfgs.extend(
+                sim.SimConfig(cycles=cycles, warmup=warmup, inj_rate=ir,
+                              pattern=p, seed=s, locality_ringlet=lr,
+                              locality_block=lb,
+                              starvation_limit=starvation_limit)
+                for s in seeds)
+    return cfgs
 
 
 def sweep_grid(topo: topo_mod.Topology, **grid_kwargs) -> list[sim.SimResult]:
@@ -194,5 +214,16 @@ def compile_stats() -> dict:
     return {
         "batch_executables": len(_AOT),
         "batch_xla_compiles": int(_XLA_COMPILES),
-        "single_cache_entries": int(sim._run_single._cache_size()),
+        "single_cache_entries": sim.compile_cache_size(),
     }
+
+
+def reset_caches() -> None:
+    """Drop every compiled executable and zero the compile counters (both
+    the batch AOT cache and ``sim``'s single-point cache), so tests can
+    assert compile counts from a clean slate."""
+    global _XLA_COMPILES
+    with _AOT_LOCK:
+        _AOT.clear()
+        _XLA_COMPILES = 0
+    sim.clear_compile_cache()

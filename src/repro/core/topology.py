@@ -398,6 +398,10 @@ def build_flat_mesh(n_pes: int, queue_depth: int = 2,
 
 
 def build(name: str, n_pes: int, **kw) -> Topology:
+    """Deprecation shim: stringly topology construction.  New code should
+    declare a ``core.spec.TopologySpec`` and call ``.build()`` — the spec
+    is hashable/JSON-able and memoizes the geometry (this function always
+    constructs a fresh object)."""
     if name in ("ring_mesh", "ringmesh", "proposed"):
         return build_ring_mesh(n_pes, **kw)
     if name in ("flat_mesh", "mesh", "2dmesh", "baseline"):

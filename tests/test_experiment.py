@@ -1,0 +1,277 @@
+"""Declarative experiment API tests: run_grid vs sweep bit-equivalence,
+open traffic registry, JSON round trips, morph overlays, cache helpers."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import sim, sweep, topology, traffic
+from repro.core.experiment import Budget, Experiment, Report, run_experiments
+from repro.core.spec import MorphOverlay, TopologySpec
+
+BUDGET = Budget(cycles=300, warmup=100)
+
+
+def _strip(r: sim.SimResult) -> sim.SimResult:
+    """Metrics-only view: cfg differs between the legacy string path and
+    the spec path (string vs TrafficSpec) by construction."""
+    return dataclasses.replace(r, cfg=None)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: Experiment.run_grid == sweep.sweep, bit for bit.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,name", [(16, "ring_mesh"), (16, "flat_mesh"),
+                                    (64, "ring_mesh"), (64, "flat_mesh")])
+def test_run_grid_matches_sweep_bitforbit(n, name):
+    """All six legacy patterns: the declarative path must reproduce the
+    legacy string-pattern sweep exactly (integer accumulators — no
+    reduction-order slack)."""
+    exp = Experiment(topology=TopologySpec(name, n), budget=BUDGET,
+                     inj_rate=0.6, seed=2)
+    reports = exp.run_grid(traffics=sim.PATTERNS)
+    cfgs = sweep.grid(inj_rates=(0.6,), patterns=sim.PATTERNS, seeds=(2,),
+                      cycles=BUDGET.cycles, warmup=BUDGET.warmup)
+    expected = sweep.sweep(topology.build(name, n), cfgs)
+    for rep, want in zip(reports, expected):
+        assert _strip(rep.sim) == _strip(want), rep.sim.row()
+
+
+def test_run_grid_locality_matches_sweep():
+    """Locality declared on the TrafficSpec must equal the legacy
+    SimConfig-level locality fields."""
+    t = traffic.spec("uniform", locality_ringlet=0.75, locality_block=0.2)
+    exp = Experiment(topology=TopologySpec("ring_mesh", 16), traffic=t,
+                     budget=BUDGET, inj_rate=0.9, seed=5)
+    rep = exp.run_grid()[0]
+    cfgs = sweep.grid(inj_rates=(0.9,), seeds=(5,), cycles=BUDGET.cycles,
+                      warmup=BUDGET.warmup, locality_ringlet=0.75,
+                      locality_block=0.2)
+    want = sweep.sweep(topology.build("ring_mesh", 16), cfgs)[0]
+    assert _strip(rep.sim) == _strip(want)
+
+
+def test_run_single_matches_grid():
+    exp = Experiment(topology=TopologySpec("ring_mesh", 16),
+                     traffic=traffic.Collective(), budget=BUDGET,
+                     inj_rate=0.4, seed=1)
+    assert _strip(exp.run().sim) == _strip(exp.run_grid()[0].sim)
+
+
+# ---------------------------------------------------------------------------
+# Open registry: a spec defined outside repro.core runs end to end.
+# ---------------------------------------------------------------------------
+@traffic.register
+@dataclasses.dataclass(frozen=True)
+class _StrideSpec(traffic.TrafficSpec):
+    """Test-local spec: constant-stride permutation."""
+
+    hops: int = 3
+
+    kind = "test_stride"
+    is_permutation = True
+
+    def destinations(self, n_pes):
+        return ((np.arange(n_pes) + self.hops) % n_pes).astype(np.int32)
+
+
+def test_custom_spec_runs_end_to_end():
+    exp = Experiment(topology=TopologySpec("ring_mesh", 16),
+                     traffic=_StrideSpec(hops=5), budget=BUDGET,
+                     inj_rate=0.5)
+    rep = exp.run()
+    assert rep.sim.delivered > 0
+    assert rep.sim.lost == 0
+    # string resolution + sweep path both see the registered kind
+    assert isinstance(traffic.resolve("test_stride"), _StrideSpec)
+    batched = sweep.sweep(exp.topology.build(), [exp.sim_config()])
+    assert _strip(batched[0]) == _strip(rep.sim)
+
+
+def test_invalid_custom_maps_rejected():
+    """The simulator validates registry-produced maps instead of trusting
+    them: wrong shape, out-of-range ids, and non-integer dtypes (which a
+    silent int32 cast would corrupt) all fail loudly."""
+    @dataclasses.dataclass(frozen=True)
+    class _Bad(traffic.TrafficSpec):
+        kind = "test_bad_local"  # deliberately NOT registered
+        mode: str = "float"
+
+        def destinations(self, n_pes):
+            if self.mode == "float":
+                return np.linspace(0, 1, n_pes)          # probabilities, oops
+            if self.mode == "range":
+                return np.full(n_pes, n_pes, np.int32)   # out of range
+            return np.zeros(n_pes - 1, np.int32)         # wrong shape
+
+    for mode in ("float", "range", "shape"):
+        with pytest.raises(ValueError, match="invalid destination map"):
+            sim.make_point(sim.SimConfig(cycles=100, warmup=10,
+                                         pattern=_Bad(mode=mode)), 16)
+
+
+def test_run_grid_accepts_oneshot_iterators():
+    exp = Experiment(topology=TopologySpec("ring_mesh", 16), budget=BUDGET)
+    reports = exp.run_grid(inj_rates=iter((0.2, 0.4)),
+                           traffics=iter(("uniform", "tornado")))
+    assert len(reports) == 4
+
+
+def test_register_rejects_duplicate_kind():
+    with pytest.raises(ValueError, match="already registered"):
+        @traffic.register
+        @dataclasses.dataclass(frozen=True)
+        class _Clash(traffic.TrafficSpec):  # noqa: F841
+            kind = "uniform"
+
+            def destinations(self, n_pes):
+                return None
+
+
+# ---------------------------------------------------------------------------
+# Registered specs produce valid maps at awkward (non-power-of-two) sizes
+# or fail with a clean error; documented properties hold.
+# ---------------------------------------------------------------------------
+POW2_ONLY = {"bit_reversal", "transpose", "shuffle"}
+
+
+@pytest.mark.parametrize("n", [12, 48])
+def test_registered_specs_at_nonpow2_sizes(n):
+    for kind, cls in traffic.registered().items():
+        spec = cls()
+        if kind in POW2_ONLY:
+            with pytest.raises(ValueError, match="power-of-two"):
+                spec.destinations(n)
+            continue
+        dst = spec.destinations(n)
+        if dst is None:  # uniform-random: drawn inside the simulator
+            continue
+        dst = np.asarray(dst)
+        assert dst.shape == (n,), kind
+        assert dst.min() >= 0 and dst.max() < n, kind
+        if cls.is_permutation:
+            assert sorted(dst.tolist()) == list(range(n)), kind
+        if cls.self_free:
+            assert not np.any(dst == np.arange(n)), kind
+
+
+def test_hotspot_weighted_apportionment():
+    h = traffic.Hotspot(sinks=((2, 3.0), (9, 1.0)))
+    dst = h.destinations(12)
+    counts = dict(zip(*np.unique(dst, return_counts=True)))
+    # 3:1 split of 12 sources = 9 vs 3, minus self-hit repairs that move a
+    # source to the other sink
+    assert set(counts) == {2, 9}
+    assert counts[2] + counts[9] == 12
+    assert abs(counts[2] - 9) <= 1
+    assert not np.any(dst == np.arange(12))
+    with pytest.raises(ValueError, match="out of range"):
+        h.destinations(8)
+    with pytest.raises(ValueError, match="weights"):
+        traffic.Hotspot(sinks=((0, 0.0),))
+
+
+def test_collective_algorithms():
+    ring = traffic.Collective().destinations(48)
+    assert ring.tolist() == [(i + 1) % 48 for i in range(48)]
+    hd = traffic.Collective(algorithm="halving_doubling", phase=2)
+    assert hd.destinations(16).tolist() == [i ^ 4 for i in range(16)]
+    with pytest.raises(ValueError, match="power-of-two"):
+        hd.destinations(12)
+    with pytest.raises(ValueError, match="phase"):
+        traffic.Collective(algorithm="halving_doubling",
+                           phase=6).destinations(16)
+    with pytest.raises(ValueError, match="algorithm"):
+        traffic.Collective(algorithm="tree")
+
+
+# ---------------------------------------------------------------------------
+# JSON round trips.
+# ---------------------------------------------------------------------------
+def test_traffic_spec_json_roundtrip():
+    specs = [cls() for cls in traffic.registered().values()]
+    specs += [traffic.Hotspot(sinks=((1, 2.0), (7, 1.5)),
+                              locality_ringlet=0.25),
+              traffic.Collective(algorithm="halving_doubling", phase=1),
+              _StrideSpec(hops=7)]
+    for s in specs:
+        assert traffic.TrafficSpec.from_json(s.to_json()) == s
+
+
+def test_topology_spec_json_roundtrip():
+    specs = [TopologySpec("flat_mesh", 64),
+             TopologySpec("ring_mesh", 64, queue_depth=3,
+                          src_queue_depth=8),
+             TopologySpec("ring_mesh", 16, morphs=(
+                 MorphOverlay(hl=1, target=0,
+                              link_states=(0, 0, 0, 0, 2, 0, 0, 0)),
+                 MorphOverlay(hl=0, target=3,
+                              link_states=(1, 1, 0, 0, 0, 0, 0, 0))))]
+    for s in specs:
+        assert TopologySpec.from_json(s.to_json()) == s
+    with pytest.raises(ValueError, match="family"):
+        TopologySpec("hypercube", 16)
+    with pytest.raises(ValueError, match="size"):
+        TopologySpec("ring_mesh", 24)
+
+
+def test_report_json_roundtrip():
+    exp = Experiment(topology=TopologySpec("ring_mesh", 16),
+                     traffic=traffic.spec("tornado", locality_block=0.1),
+                     budget=BUDGET, inj_rate=0.35, seed=9)
+    rep = exp.run()
+    rt = Report.from_json(rep.to_json())
+    assert rt == rep
+    assert rt.row() == rep.row()
+    assert Experiment.from_json(exp.to_json()) == exp
+
+
+# ---------------------------------------------------------------------------
+# Declarative morph overlays == controller morphs; spec build cache.
+# ---------------------------------------------------------------------------
+def test_topology_spec_morph_overlay():
+    from repro.core import morph, packet
+    base = TopologySpec("ring_mesh", 16)
+    dark = TopologySpec("ring_mesh", 16, morphs=(
+        MorphOverlay(hl=1, target=0, link_states=(0, 0, 0, 0, 2, 0, 0, 0)),))
+    reps = run_experiments(
+        [Experiment(topology=s, budget=BUDGET, inj_rate=0.2)
+         for s in (base, dark)])
+    assert reps[1].sim.dropped > reps[0].sim.dropped
+    # identical to applying the same morph packet through the controller
+    t = base.build_fresh()
+    morph.MorphController(t).apply(
+        packet.MorphPacket(hl=1, ers=0,
+                           link_states=(0, 0, 0, 0, 2, 0, 0, 0)), target=0)
+    manual = sim.simulate(t, reps[1].experiment.sim_config())
+    assert _strip(manual) == _strip(reps[1].sim)
+
+
+def test_spec_build_is_memoized():
+    a = TopologySpec("ring_mesh", 16)
+    assert a.build() is TopologySpec("ring_mesh", 16).build()
+    assert a.build() is not a.build_fresh()
+    assert a.build() is not TopologySpec("ring_mesh", 16,
+                                         src_queue_depth=8).build()
+
+
+# ---------------------------------------------------------------------------
+# Public compile-cache helpers (used by sweep.compile_stats).
+# ---------------------------------------------------------------------------
+def test_cache_helpers_reset_counters():
+    t = TopologySpec("ring_mesh", 16).build()
+    sweep.reset_caches()
+    assert sim.compile_cache_size() == 0
+    stats = sweep.compile_stats()
+    assert stats["batch_xla_compiles"] == 0
+    assert stats["batch_executables"] == 0
+    assert stats["single_cache_entries"] == 0
+    cfg = sim.SimConfig(cycles=120, warmup=20, inj_rate=0.2)
+    sim.simulate(t, cfg)
+    assert sim.compile_cache_size() == 1
+    sweep.sweep(t, [cfg])
+    stats = sweep.compile_stats()
+    assert stats["batch_xla_compiles"] == 1
+    assert stats["single_cache_entries"] == 1
+    sim.clear_compile_cache()
+    assert sim.compile_cache_size() == 0

@@ -105,6 +105,40 @@ def test_kind_diagnostics_consistent():
     assert all(v >= 0 for sub in d.values() for v in sub.values())
 
 
+def test_simconfig_rejects_bad_inj_rate():
+    with pytest.raises(ValueError, match="inj_rate"):
+        sim.SimConfig(inj_rate=1.5)
+    with pytest.raises(ValueError, match="inj_rate"):
+        sim.SimConfig(inj_rate=-0.1)
+
+
+def test_simconfig_rejects_bad_cycles():
+    with pytest.raises(ValueError, match="cycles"):
+        sim.SimConfig(cycles=0, warmup=0)
+    with pytest.raises(ValueError, match="cycles"):
+        sim.SimConfig(cycles=-10, warmup=0)
+
+
+def test_simconfig_rejects_bad_warmup():
+    with pytest.raises(ValueError, match="warmup"):
+        sim.SimConfig(cycles=100, warmup=100)
+    with pytest.raises(ValueError, match="warmup"):
+        sim.SimConfig(cycles=100, warmup=250)
+    with pytest.raises(ValueError, match="warmup"):
+        sim.SimConfig(cycles=100, warmup=-1)
+    sim.SimConfig(cycles=100, warmup=0)  # boundary: measure from cycle 0
+
+
+def test_simconfig_rejects_unknown_pattern():
+    with pytest.raises(ValueError, match="unknown pattern"):
+        sim.SimConfig(pattern="zipf")
+
+
+def test_simconfig_rejects_bad_locality():
+    with pytest.raises(ValueError, match="locality"):
+        sim.SimConfig(locality_ringlet=0.8, locality_block=0.3)
+
+
 def test_patterns_are_fixed_permutations():
     perm = sim.pattern_destinations("transpose", 64)
     assert sorted(perm.tolist()) == list(range(64))
