@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: collect test test-dist dryrun-smoke bench-quick lint
+.PHONY: collect test test-dist dryrun-smoke bench-quick bench-kernels lint
 
 # Lint gate (pinned config: ruff.toml).  ruff is optional in the
 # container; skip cleanly when `python -m ruff` is absent rather than
@@ -20,14 +20,21 @@ lint:
 collect: lint
 	$(PY) -m pytest --collect-only -q
 	$(PY) -c "import benchmarks.run, benchmarks.noc_tables, \
-	          benchmarks.serial_baseline, benchmarks.kernel_micro"
+	          benchmarks.serial_baseline, benchmarks.kernel_micro, \
+	          repro.kernels.noc_step"
 
 # CI-sized benchmark: small sim grids (including the experiment_grid_smoke
 # table — one Experiment.run_grid over the collective + weighted-hotspot
-# registry specs) + the sweep/experiment equivalence tests.
+# registry specs) + the sweep/experiment/kernel-backend equivalence tests.
 bench-quick:
 	$(PY) -m benchmarks.run --quick --terse --no-baseline
-	$(PY) -m pytest -q tests/test_sweep.py tests/test_experiment.py
+	$(PY) -m pytest -q tests/test_sweep.py tests/test_experiment.py \
+	      tests/test_noc_kernel.py
+
+# Kernel microbenchmarks only (attention/SSD + the fused noc_step kernel
+# vs its XLA scan oracle at 64/256/1024 PEs).
+bench-kernels:
+	$(PY) -m benchmarks.run --only kernel_micro --terse
 
 test: collect
 	$(PY) -m pytest -x -q

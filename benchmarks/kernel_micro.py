@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sim, topology
 from repro.kernels import ops, ref
 
 
@@ -22,7 +23,36 @@ def _time(fn, *args, iters=3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def run():
+NOC_CYCLES, NOC_WARMUP = 200, 50
+
+
+def _noc_rows(sizes) -> list:
+    """Fused noc_step kernel vs the XLA scan oracle, per-cycle wall clock.
+    On this CPU host the pallas path runs in interpret mode, so timings
+    measure the correctness path; on a TPU the same rows measure the real
+    fused kernel."""
+    rows = []
+    for fam in ("ring_mesh", "flat_mesh"):
+        for n in sizes:
+            topo = topology.build(fam, n)
+            geom = sim.build_geometry(topo)
+            point = sim.make_point(
+                sim.SimConfig(cycles=NOC_CYCLES, warmup=NOC_WARMUP,
+                              inj_rate=0.5, seed=0), topo.n_pes)
+            for backend in ("xla", "pallas"):
+                us = _time(
+                    lambda g, p, _b=backend: sim._run_single(
+                        g, p, cycles=NOC_CYCLES, warmup=NOC_WARMUP,
+                        starvation_limit=8, backend=_b),
+                    geom, point, iters=2)
+                mode = "pallas_interpret" if backend == "pallas" \
+                    and sim.noc_step.default_interpret() else backend
+                rows.append((f"noc_step_{mode}_{fam}_{n}", us,
+                             f"us_per_cycle={us / NOC_CYCLES:.1f}"))
+    return rows
+
+
+def run(quick: bool = False):
     rows = []
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     # attention: xla ref vs chunked (memory-lean) path
@@ -63,4 +93,7 @@ def run():
                                            block_k=128), q2, k2, v2, iters=1)
     rows.append(("flash_attention_pallas_interpret_256", us_pl,
                  "interpret-mode (TPU target)"))
+
+    # NoC simulator hot path: fused pallas kernel vs XLA scan oracle
+    rows.extend(_noc_rows((64,) if quick else (64, 256, 1024)))
     return rows

@@ -18,13 +18,47 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+import jax
 
 from benchmarks import kernel_micro, noc_tables, serial_baseline
 from repro.core import sweep
 
 RESULTS: dict = {"tables": {}}
+
+# Persistent-cache hit/miss counters, fed by jax's monitoring events.
+_PCACHE = {"hits": 0, "misses": 0}
+
+
+def _setup_persistent_cache() -> dict | None:
+    """Opt-in JAX persistent compilation cache: set REPRO_COMPILE_CACHE
+    to a directory and repeat runs skip XLA compilation entirely (the
+    in-process jit caches in ``sweep`` only help within one run).
+    Returns the state dict recorded into BENCH_noc.json, or None when
+    the env var is unset."""
+    d = os.environ.get("REPRO_COMPILE_CACHE")
+    if not d:
+        return None
+    os.makedirs(d, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", d)
+    # Benchmark programs compile fast; cache everything regardless of
+    # compile time or artifact size so the hit counters are meaningful.
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+
+    from jax._src import monitoring
+
+    def _count(event: str, **kw) -> None:
+        if event == "/jax/compilation_cache/cache_hits":
+            _PCACHE["hits"] += 1
+        elif event == "/jax/compilation_cache/cache_misses":
+            _PCACHE["misses"] += 1
+
+    monitoring.register_event_listener(_count)
+    return {"dir": d, "entries_before": len(os.listdir(d))}
 
 
 def _with_fresh_cache(fn):
@@ -74,6 +108,7 @@ def main() -> None:
                    help="skip the frozen-seed serial baseline comparison")
     args, _ = p.parse_known_args()
     v = not args.terse
+    pcache = _setup_persistent_cache()
 
     sizes = (16, 64) if args.quick else (16, 64, 256)
     scal_sizes = (16, 32, 64, 128) if args.quick \
@@ -141,12 +176,23 @@ def main() -> None:
                                 "after": sweep.compile_stats()}
     if not args.only or args.only in "kernel_micro":
         matched = True
-        for name, us, derived in kernel_micro.run():
+        km_rows = []
+        for name, us, derived in kernel_micro.run(quick=args.quick):
             print(f"{name},{us:.0f},{derived}")
-            RESULTS["tables"][name] = {"steady_s": round(us / 1e6, 6),
-                                       "derived": derived}
+            km_rows.append({"name": name, "us_per_call": round(us, 1),
+                            "derived": derived})
+        RESULTS["tables"]["kernel_micro"] = {"rows": km_rows}
     if not matched:
         print(f"# no table matches --only {args.only!r}", file=sys.stderr)
+
+    if pcache is not None:
+        pcache.update(entries_after=len(os.listdir(pcache["dir"])),
+                      hits=_PCACHE["hits"], misses=_PCACHE["misses"])
+        RESULTS["compile_cache"]["persistent"] = pcache
+        print(f"# persistent compile cache: {_PCACHE['hits']} hits / "
+              f"{_PCACHE['misses']} misses "
+              f"({pcache['entries_before']} -> {pcache['entries_after']} "
+              f"entries in {pcache['dir']})")
 
     # Quick / partial runs must not clobber the committed full-run record.
     out = "BENCH_noc.json" if not (args.quick or args.only) \

@@ -35,11 +35,14 @@ from repro.core.spec import TopologySpec
 
 @dataclasses.dataclass(frozen=True)
 class Budget:
-    """Simulation budget: how long to run and measure one point."""
+    """Simulation budget: how long to run and measure one point, and which
+    simulator backend executes it (``"xla"`` scan oracle / ``"pallas"``
+    fused kernel — bit-identical, see DESIGN.md §11)."""
 
     cycles: int = 1200
     warmup: int = 400
     starvation_limit: int = 8
+    backend: str = "xla"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -97,7 +100,8 @@ class Experiment:
         return sim.SimConfig(
             cycles=self.budget.cycles, warmup=self.budget.warmup,
             inj_rate=self.inj_rate, pattern=self.traffic, seed=self.seed,
-            starvation_limit=self.budget.starvation_limit)
+            starvation_limit=self.budget.starvation_limit,
+            backend=self.budget.backend)
 
     def run(self) -> "Report":
         """Run this one point (per-point jit path; bit-identical to the
@@ -225,7 +229,8 @@ def _sim_config_to_dict(cfg: sim.SimConfig) -> dict:
             "inj_rate": cfg.inj_rate, "pattern": pattern,
             "locality_ringlet": cfg.locality_ringlet,
             "locality_block": cfg.locality_block, "seed": cfg.seed,
-            "starvation_limit": cfg.starvation_limit}
+            "starvation_limit": cfg.starvation_limit,
+            "backend": cfg.backend}
 
 
 def _sim_config_from_dict(d: dict) -> sim.SimConfig:

@@ -15,7 +15,7 @@ inject buffer is deeper, Fig. 4's Buf-3).  Each cycle:
 4. traffic generators inject new single-flit packets Bernoulli(Ir) per PE
    (§7.2), with optional ringlet/block locality (§3's operating regime).
 
-Hot-path layout (DESIGN.md §4): the per-cycle update is scatter-free.
+Hot-path layout (DESIGN.md §4/§11): the per-cycle update is scatter-free.
 Arbitration and enqueue both run over *static fan-in candidate tables*
 (every queue can only receive traffic from the queues entering its source
 node, a property of the topology, not of the current route table), so the
@@ -26,6 +26,14 @@ residue check instead of two fixed 12-iteration scans.  All per-point
 parameters (injection rate, locality, seed, destination map) are *traced*,
 so one XLA compilation covers a whole sweep grid; ``core.sweep`` vmaps the
 same step over batches of points.
+
+The step *math* lives in ``kernels.noc_step.cycle_step`` and runs behind
+``SimConfig(backend=...)``: ``"xla"`` scans it with ``lax.scan`` (the
+bit-exact correctness oracle), ``"pallas"`` runs the whole cycle loop as
+one fused Pallas kernel that keeps queue state, candidate scores and the
+metric accumulators in VMEM scratch across cycles and fixpoint passes
+(interpret mode off-TPU).  Both backends share every accumulator as an
+int32, so they are bit-identical — asserted by tests/test_noc_kernel.py.
 
 Accumulators are integers (latency is in whole cycles), so batched and
 single-point executions produce bit-identical metrics regardless of XLA
@@ -45,6 +53,9 @@ import numpy as np
 from repro.core import packet as pk
 from repro.core import topology as topo_mod
 from repro.core import traffic
+from repro.kernels import noc_step
+
+BACKENDS = ("xla", "pallas")
 
 # Legacy string patterns — deprecation shims over the ``core.traffic``
 # registry (new code passes TrafficSpec instances; these strings resolve
@@ -76,8 +87,12 @@ class SimConfig:
     locality_block: float = 0.0
     seed: int = 0
     starvation_limit: int = 8
+    backend: str = "xla"  # "xla" (lax.scan oracle) | "pallas" (fused kernel)
 
     def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
         if not 0.0 <= self.inj_rate <= 1.0:
             raise ValueError(
                 f"inj_rate must be in [0, 1], got {self.inj_rate}")
@@ -344,14 +359,8 @@ def build_geometry(topo: topo_mod.Topology) -> Geometry:
 # ---------------------------------------------------------------------------
 def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
               starvation_limit: int, arb_iters: int = ARB_ITERS,
-              diagnostics: bool = False) -> Metrics:
-    L, P, K = geom.n_links, geom.n_pes, geom.depth
-    NP1 = geom.n_phys + 1
-    link_ids = jnp.arange(L + 1, dtype=jnp.int32)
-    pow2 = 1 << int(np.ceil(np.log2(L + 1)))
-    row_ids = link_ids[:, None]                      # [L+1, 1]
-    p_ids = jnp.arange(NP1, dtype=jnp.int32)[:, None]  # [NP1, 1]
-    colK = jnp.arange(K, dtype=jnp.int32)[None, :]   # [1, K]
+              diagnostics: bool = False, backend: str = "xla") -> Metrics:
+    L, P = geom.n_links, geom.n_pes
     kinds8 = jnp.arange(8, dtype=jnp.int32)[:, None]  # [8, 1]
     kind_oh = geom.kind[None, :] == kinds8           # [8, L+1] static mask
 
@@ -393,175 +402,40 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
     # of eventual latency per cycle.  Enforce the int32 envelope exactly.
     assert cycles * geom.cap_total < (1 << 31), \
         "int32 lat_sum could overflow for this (cycles, topology) budget"
-    q_pack0 = jnp.zeros((L + 1, K), jnp.int32)
-    q_len0 = jnp.zeros((L + 1,), jnp.int32)
-    wait0 = jnp.zeros((L + 1,), jnp.int32)
-    z8 = jnp.zeros((8,), jnp.int32)
-    metrics0 = Metrics(*([jnp.int32(0)] * 8), z8, z8, z8)
 
-    def step(carry, xs):
-        q_pack, q_len, wait, m = carry
-        cycle, inj, dst = xs
-        measure = cycle >= warmup
+    # The step math is shared with the fused kernel (kernels.noc_step):
+    # "xla" scans it (the bit-exact oracle), "pallas" runs the whole loop
+    # as one kernel with the carry in VMEM scratch.
+    if backend == "pallas":
+        ql, m_scal, m_kind = noc_step.run_fused(
+            geom, inj_s, dst_s, cycles=cycles, warmup=warmup,
+            starvation_limit=starvation_limit, arb_iters=arb_iters,
+            diagnostics=diagnostics)
+    elif backend == "xla":
+        def step(carry, xs):
+            cycle, inj, dst = xs
+            return noc_step.cycle_step(
+                geom, carry, cycle, inj, dst, warmup=warmup,
+                starvation_limit=starvation_limit, arb_iters=arb_iters,
+                diagnostics=diagnostics), None
 
-        # --- 1. routing: next link for every queue head ------------------
-        head_pack = q_pack[:, 0]
-        head_dst = (head_pack & 2047) - 1
-        head_born = head_pack >> 11
-        valid = q_len > 0
-        nxt = jnp.take_along_axis(
-            geom.route, jnp.clip(head_dst, 0, P - 1)[:, None],
-            axis=1)[:, 0].astype(jnp.int32)
-        nxt = jnp.where(valid, nxt, -1)
-        nxt_c = jnp.clip(nxt, 0, L)
-        nxt_phys = geom.phys[nxt_c]
+        carry0 = noc_step.initial_state(L, geom.depth)
+        xs = (jnp.arange(cycles, dtype=jnp.int32), inj_s, dst_s)
+        (_, ql, _, m_scal, m_kind), _ = jax.lax.scan(step, carry0, xs)
+    else:  # pragma: no cover - SimConfig validates before tracing
+        raise ValueError(f"unknown simulator backend {backend!r}")
 
-        # Switched-off routes (INVALID) drop the flit — paper §5.1.
-        drop_route = valid & (nxt < 0)
-
-        # --- 2. arbitration over each output physical channel ------------
-        # One grant per physical channel per cycle; the two VC queues of a
-        # channel are separate contenders and separate targets.  Weighted
-        # round-robin (§4.2): in-ring traffic leads by a small static
-        # margin; waiting inputs age upward so no port starves.
-        contend = valid & (nxt >= 0)
-        eff_prio = geom.prio * 2 + jnp.minimum(wait, starvation_limit)
-        rot = (link_ids + cycle) & (pow2 - 1)     # unique RR tiebreak
-        score = eff_prio * pow2 + rot             # globally unique
-
-        # Iteration-invariant gathers, hoisted out of the fixpoint loop:
-        # candidate scores, candidate->channel match, and the target-queue
-        # occupancy/capacity only change per cycle, not per re-arbitration.
-        cand_score = jnp.where(nxt_phys[geom.cand] == p_ids,
-                               score[geom.cand], -1)   # [NP1, Fc]
-        ql_t = q_len[nxt_c]
-        cap_t = geom.cap[nxt_c]
-
-        def select(active):
-            # Scatter-free argmax per output channel: mask each channel's
-            # structural candidates to the active ones, row-max, then
-            # winners are the queues matching their channel's best score
-            # (scores are globally unique).
-            best = jnp.max(jnp.where(active[geom.cand], cand_score, -1),
-                           axis=1)
-            return active & (score == best[nxt_phys])
-
-        def feasible(w):
-            # A grant into a full queue is only feasible if that queue's
-            # own head departs this cycle (lockstep / slotted-ring
-            # semantics: completely full cycles of queues rotate).
-            return (ql_t - w[nxt_c].astype(jnp.int32)) < cap_t
-
-        # Grant-and-re-arbitrate fixpoint with early exit.  Infeasible
-        # grantees are removed from the candidate set and the output is
-        # re-arbitrated, so an aged high-priority head stuck on a frozen
-        # queue cannot shadow a feasible lower-priority contender (priority
-        # inversion would otherwise hard-deadlock the hierarchy).  Any
-        # residue past the iteration cap is counted (and not moved) so the
-        # conservation property stays exact.
-        w0 = select(contend)
-        feas0 = feasible(w0)
-
-        def arb_cond(s):
-            return s[3] & (s[4] < arb_iters)
-
-        def arb_body(s):
-            active, w, feas_w, _, i = s
-            active = active & (~w | feas_w)
-            w = select(active)
-            feas_w = feasible(w)
-            return (active, w, feas_w, jnp.any(w & ~feas_w), i + 1)
-
-        _, winner, feas_w, _, _ = jax.lax.while_loop(
-            arb_cond, arb_body,
-            (contend, w0, feas0, jnp.any(w0 & ~feas0), jnp.int32(1)))
-        residue = winner & ~feas_w
-        winner = winner & ~residue
-
-        deq = winner | drop_route
-        sink = geom.is_sink[nxt_c]
-        send = winner & ~sink
-
-        # --- 3. apply moves ----------------------------------------------
-        q_pack = jnp.where(
-            deq[:, None],
-            jnp.concatenate([q_pack[:, 1:],
-                             jnp.zeros((L + 1, 1), jnp.int32)], 1), q_pack)
-        q_len = q_len - deq.astype(jnp.int32)
-
-        # Scatter-free enqueue: invert the move map through the structural
-        # fan-in table — each queue row finds the (unique) sender targeting
-        # it, then writes its tail slot with a one-hot column mask.
-        inc = send[geom.intab] & (nxt_c[geom.intab] == row_ids)
-        src_q = jnp.max(jnp.where(inc, geom.intab, -1), axis=1)
-        has_in = src_q >= 0
-        src_qc = jnp.clip(src_q, 0, L)
-        # Exactness guard: a residue removal can leave a grant whose target
-        # is still full; such moves become counted drops rather than
-        # corrupting queue state (kept 0 by the fixpoint in practice —
-        # asserted by the conservation tests).
-        lost_enq_row = has_in & (q_len >= geom.cap)
-        enq_row = has_in & ~lost_enq_row
-
-        deliver = winner & sink
-        delivered_c = jnp.sum(deliver.astype(jnp.int32))
-        lat_c = jnp.sum(jnp.where(deliver, cycle - head_born, 0))
-        moved_c = jnp.sum(winner.astype(jnp.int32))
-        wait = jnp.where(valid & ~deq, wait + 1, 0)
-
-        # --- 4. injection ------------------------------------------------
-        # Nothing ever routes *into* a PE_SRC queue, so enqueue and
-        # injection touch disjoint rows and share one tail-write pass
-        # against the same post-move q_len.
-        room = q_len[geom.pe_src_link] < geom.cap[geom.pe_src_link]
-        acc = inj & room
-        pe_of_row = geom.inj_pe
-        pec = jnp.clip(pe_of_row, 0, P - 1)
-        acc_row = (pe_of_row >= 0) & acc[pec]
-
-        put = enq_row | acc_row
-        tail = put[:, None] & (colK == jnp.clip(q_len, 0, K - 1)[:, None])
-        inj_pack = (cycle << 11) | (dst[pec].astype(jnp.int32) + 1)
-        val = jnp.where(enq_row, head_pack[src_qc], inj_pack)
-        q_pack = jnp.where(tail, val[:, None], q_pack)
-        q_len = q_len + put.astype(jnp.int32)
-
-        g = measure.astype(jnp.int32)
-        if diagnostics:
-            stalled = contend & ~winner
-            stall_kind = geom.kind[nxt_c]
-            wins = m.wins_by_kind + g * jnp.sum(
-                kind_oh & winner[None, :], axis=1, dtype=jnp.int32)
-            stalls = m.stall_next_kind + g * jnp.sum(
-                (stall_kind[None, :] == kinds8) & stalled[None, :], axis=1,
-                dtype=jnp.int32)
-        else:
-            wins, stalls = m.wins_by_kind, m.stall_next_kind
-        m = Metrics(
-            delivered=m.delivered + g * delivered_c,
-            offered=m.offered + g * jnp.sum(inj.astype(jnp.int32)),
-            accepted=m.accepted + g * jnp.sum(acc.astype(jnp.int32)),
-            dropped=m.dropped
-            + g * (jnp.sum((inj & ~room).astype(jnp.int32))
-                   + jnp.sum(drop_route.astype(jnp.int32))
-                   + jnp.sum(lost_enq_row.astype(jnp.int32))),
-            lost=m.lost + jnp.sum(lost_enq_row.astype(jnp.int32))
-            + jnp.sum(residue.astype(jnp.int32)),
-            lat_sum=m.lat_sum + g * lat_c,
-            moved=m.moved + g * moved_c,
-            in_flight=m.in_flight,
-            wins_by_kind=wins,
-            stall_next_kind=stalls,
-            q_len_by_kind=m.q_len_by_kind,
-        )
-        return (q_pack, q_len, wait, m), None
-
-    carry0 = (q_pack0, q_len0, wait0, metrics0)
-    xs = (jnp.arange(cycles, dtype=jnp.int32), inj_s, dst_s)
-    (qp, ql, w, m), _ = jax.lax.scan(step, carry0, xs)
-    return dataclasses.replace(
-        m,
+    return Metrics(
+        delivered=m_scal[noc_step.DELIVERED],
+        offered=m_scal[noc_step.OFFERED],
+        accepted=m_scal[noc_step.ACCEPTED],
+        dropped=m_scal[noc_step.DROPPED],
+        lost=m_scal[noc_step.LOST],
+        lat_sum=m_scal[noc_step.LAT_SUM],
+        moved=m_scal[noc_step.MOVED],
         in_flight=jnp.sum(ql),
+        wins_by_kind=m_kind[noc_step.KIND_WINS],
+        stall_next_kind=m_kind[noc_step.KIND_STALLS],
         q_len_by_kind=jnp.sum(jnp.where(kind_oh, ql[None, :], 0), axis=1,
                               dtype=jnp.int32))
 
@@ -569,7 +443,7 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
 _run_single = jax.jit(
     _run_core,
     static_argnames=("cycles", "warmup", "starvation_limit", "arb_iters",
-                     "diagnostics"))
+                     "diagnostics", "backend"))
 
 
 def compile_cache_size() -> int:
@@ -612,7 +486,8 @@ def simulate(topo: topo_mod.Topology, cfg: SimConfig) -> SimResult:
     geom = build_geometry(topo)
     point = make_point(cfg, topo.n_pes)
     metrics = _run_single(geom, point, cycles=cfg.cycles, warmup=cfg.warmup,
-                          starvation_limit=cfg.starvation_limit)
+                          starvation_limit=cfg.starvation_limit,
+                          backend=cfg.backend)
     metrics = jax.tree.map(np.asarray, metrics)
     return _to_result(topo, cfg, metrics)
 
@@ -625,7 +500,8 @@ def kind_diagnostics(topo: topo_mod.Topology, cfg: SimConfig) -> dict:
     geom = build_geometry(topo)
     point = make_point(cfg, topo.n_pes)
     m = _run_single(geom, point, cycles=cfg.cycles, warmup=cfg.warmup,
-                    starvation_limit=cfg.starvation_limit, diagnostics=True)
+                    starvation_limit=cfg.starvation_limit, diagnostics=True,
+                    backend=cfg.backend)
     names = topo_mod.KIND_NAMES
     return {
         field: {names[k]: int(np.asarray(getattr(m, field))[k])

@@ -41,15 +41,17 @@ from repro.core import traffic
 
 @functools.partial(
     jax.jit, static_argnames=("cycles", "warmup", "starvation_limit",
-                              "arb_iters"))
+                              "backend", "arb_iters"))
 def _run_batch(geom: sim.Geometry, points: sim.SweepPoint, *, cycles: int,
-               warmup: int, starvation_limit: int,
+               warmup: int, starvation_limit: int, backend: str = "xla",
                arb_iters: int = sim.ARB_ITERS) -> sim.Metrics:
     """vmap of the simulator core over a stacked SweepPoint batch; the
-    geometry is broadcast (in_axes=None) so it is uploaded once."""
+    geometry is broadcast (in_axes=None) so it is uploaded once.  Both
+    backends vmap — the fused pallas kernel batches its traffic streams
+    against the broadcast geometry."""
     run = functools.partial(sim._run_core, cycles=cycles, warmup=warmup,
                             starvation_limit=starvation_limit,
-                            arb_iters=arb_iters)
+                            backend=backend, arb_iters=arb_iters)
     return jax.vmap(run, in_axes=(None, 0))(geom, points)
 
 
@@ -64,24 +66,25 @@ _XLA_COMPILES = 0
 
 
 def _static_key(geom: sim.Geometry, batch: int, cycles: int, warmup: int,
-                starv: int, arb_iters: int) -> tuple:
+                starv: int, backend: str, arb_iters: int) -> tuple:
     return (geom.n_links, geom.n_phys, geom.n_pes, geom.depth,
             geom.cand.shape, geom.intab.shape, batch, cycles, warmup, starv,
-            arb_iters)
+            backend, arb_iters)
 
 
 def _executable(geom: sim.Geometry, points: sim.SweepPoint, cycles: int,
-                warmup: int, starv: int,
+                warmup: int, starv: int, backend: str = "xla",
                 arb_iters: int = sim.ARB_ITERS):
     global _XLA_COMPILES
     key = _static_key(geom, points.seed.shape[0], cycles, warmup, starv,
-                      arb_iters)
+                      backend, arb_iters)
     with _AOT_LOCK:
         exe = _AOT.get(key)
     if exe is None:
         exe = _run_batch.lower(
             geom, points, cycles=cycles, warmup=warmup,
-            starvation_limit=starv, arb_iters=arb_iters).compile()
+            starvation_limit=starv, backend=backend,
+            arb_iters=arb_iters).compile()
         with _AOT_LOCK:
             if key in _AOT:          # lost a compile race: keep the winner
                 exe = _AOT[key]      # (counter stays exact either way)
@@ -101,8 +104,8 @@ def _grouped(topo: topo_mod.Topology, cfgs: Sequence[sim.SimConfig]):
     geom = sim.build_geometry(topo)
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cfgs):
-        groups.setdefault((c.cycles, c.warmup, c.starvation_limit),
-                          []).append(i)
+        groups.setdefault((c.cycles, c.warmup, c.starvation_limit,
+                           c.backend), []).append(i)
     return geom, [(key, idxs, _stack_points([cfgs[i] for i in idxs],
                                             topo.n_pes))
                   for key, idxs in groups.items()]
@@ -173,12 +176,14 @@ def grid(inj_rates: Iterable[float] = (0.25,),
          seeds: Iterable[int] = (0,),
          cycles: int = 1200, warmup: int = 400,
          locality_ringlet: float = 0.0, locality_block: float = 0.0,
-         starvation_limit: int = 8) -> list[sim.SimConfig]:
+         starvation_limit: int = 8,
+         backend: str = "xla") -> list[sim.SimConfig]:
     """Cross-product config grid (rate-major, then pattern, then seed).
     ``patterns`` accepts legacy strings and ``traffic.TrafficSpec``
     instances alike; the locality kwargs describe the grid's regime and
     are folded into specs that don't declare their own (declaring both
-    is an error)."""
+    is an error).  ``backend`` selects the simulator hot path
+    (``"xla"`` scan oracle / ``"pallas"`` fused kernel) for every point."""
     patterns = tuple(patterns)  # seeds/patterns are re-iterated per rate:
     seeds = tuple(seeds)        # materialize so one-shot iterators work
     cfgs = []
@@ -198,7 +203,8 @@ def grid(inj_rates: Iterable[float] = (0.25,),
                 sim.SimConfig(cycles=cycles, warmup=warmup, inj_rate=ir,
                               pattern=p, seed=s, locality_ringlet=lr,
                               locality_block=lb,
-                              starvation_limit=starvation_limit)
+                              starvation_limit=starvation_limit,
+                              backend=backend)
                 for s in seeds)
     return cfgs
 

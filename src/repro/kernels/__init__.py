@@ -4,16 +4,20 @@ Layout (per the kernels/ contract):
     flash_attention.py — pl.pallas_call + BlockSpec flash attention
                          (causal / GQA / sliding window)
     ssd_scan.py        — Mamba-2 SSD chunked scan (state in VMEM scratch)
+    noc_step.py        — fused NoC arbitration/enqueue cycle step (queue
+                         state + fixpoint + metrics in VMEM scratch); the
+                         shared step math behind SimConfig's backend switch
     ops.py             — jit'd wrappers with the xla|pallas impl switch
     ref.py             — pure-jnp oracles used by the allclose test sweeps
 
-The Ring-Mesh paper itself contributes no matmul-shaped compute (a 43-bit
-router is control logic, not MXU work — see DESIGN.md §2); these kernels
-cover the attention/SSM hot spots of the architectures the system serves.
+The flash/SSD kernels cover the attention/SSM hot spots of the served
+architectures (a 43-bit router is control logic, not MXU work — DESIGN.md
+§2); noc_step is the simulator's own hot path (DESIGN.md §11).
 """
-from repro.kernels import ops, ref
+from repro.kernels import noc_step, ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import attention, ssd
 from repro.kernels.ssd_scan import ssd_scan
 
-__all__ = ["ops", "ref", "flash_attention", "ssd_scan", "attention", "ssd"]
+__all__ = ["noc_step", "ops", "ref", "flash_attention", "ssd_scan",
+           "attention", "ssd"]

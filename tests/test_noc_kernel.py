@@ -1,0 +1,125 @@
+"""Backend-equivalence tests for the fused Pallas noc_step kernel.
+
+``SimConfig(backend="pallas")`` (interpret mode on CPU) must be
+*bit-identical* to the ``backend="xla"`` scan oracle: every metric is an
+int32 accumulator, so there is no floating-point slack to hide behind.
+The matrix covers both topologies, morph overlays on/off, and queue
+regimes from empty (zero injection) through near-full to saturated
+(rate 1.0 hotspot, which also exercises drops and back-pressure).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import experiment, sim, sweep, topology
+from repro.core.spec import MorphOverlay, TopologySpec
+
+CYCLES, WARMUP = 300, 100
+
+
+def _assert_backends_identical(topo, cfg_kw):
+    rx = sim.simulate(topo, sim.SimConfig(backend="xla", **cfg_kw))
+    rp = sim.simulate(topo, sim.SimConfig(backend="pallas", **cfg_kw))
+    # Results embed their SimConfig (which differs only in `backend`);
+    # every measured field must match exactly.
+    assert dataclasses.replace(rp, cfg=rx.cfg) == rx, (
+        cfg_kw, rx.row(), rp.row())
+    return rx, rp
+
+
+@pytest.mark.parametrize("family", ["ring_mesh", "flat_mesh"])
+@pytest.mark.parametrize("rate,pattern,seed", [
+    (0.0, "uniform", 0),        # empty queues: nothing ever enqueues
+    (0.25, "uniform", 1),       # steady state
+    (0.9, "transpose", 2),      # near-full queues, heavy contention
+    (1.0, "hotspot", 3),        # saturated: full queues, drops, aging
+])
+def test_backend_bit_identical(family, rate, pattern, seed):
+    t = topology.build(family, 16)
+    _assert_backends_identical(
+        t, dict(cycles=CYCLES, warmup=WARMUP, inj_rate=rate,
+                pattern=pattern, seed=seed))
+
+
+@pytest.mark.parametrize("family", ["ring_mesh", "flat_mesh"])
+def test_backend_bit_identical_64_locality(family):
+    """Bigger geometry + the paper's locality regime (ringlet/block
+    peer draws take the pregenerated-RNG paths)."""
+    t = topology.build(family, 64)
+    _assert_backends_identical(
+        t, dict(cycles=CYCLES, warmup=WARMUP, inj_rate=0.6,
+                pattern="uniform", seed=7, **sim.PAPER_LOCALITY))
+
+
+def test_backend_bit_identical_with_morph_overlay():
+    """Morph overlays switch links off (routes become INVALID -> drops);
+    the kernel must reproduce the morphed route table exactly."""
+    spec = TopologySpec("ring_mesh", 16, morphs=(
+        MorphOverlay(hl=1, target=0,
+                     link_states=(0, 0, 0, 0, 2, 0, 0, 0)),))
+    rx, _ = _assert_backends_identical(
+        spec.build(), dict(cycles=CYCLES, warmup=WARMUP, inj_rate=0.3,
+                           seed=4))
+    assert rx.dropped > 0  # the overlay is actually in effect
+
+
+def test_backend_validation():
+    with pytest.raises(ValueError, match="backend"):
+        sim.SimConfig(backend="cuda")
+
+
+def test_kind_diagnostics_match():
+    """The per-kind instrumentation counters ride the same kernel."""
+    t = topology.build("ring_mesh", 16)
+    cfg = dict(cycles=CYCLES, warmup=WARMUP, inj_rate=0.5, seed=5)
+    dx = sim.kind_diagnostics(t, sim.SimConfig(backend="xla", **cfg))
+    dp = sim.kind_diagnostics(t, sim.SimConfig(backend="pallas", **cfg))
+    assert dx == dp
+    assert sum(dx["wins_by_kind"].values()) > 0
+
+
+def test_sweep_pallas_vmap_matches_per_point_and_oracle():
+    """core.sweep vmaps the fused kernel unchanged: the batched pallas
+    grid must equal per-point pallas simulate() AND the XLA oracle."""
+    t = topology.build("ring_mesh", 16)
+    cfgs = sweep.grid(inj_rates=(0.25, 0.9),
+                      patterns=("uniform", "tornado"), seeds=(0, 3),
+                      cycles=250, warmup=50, backend="pallas")
+    batched = sweep.sweep(t, cfgs)
+    for cfg, rb in zip(cfgs, batched):
+        assert rb == sim.simulate(t, cfg)
+        rx = sim.simulate(t, dataclasses.replace(cfg, backend="xla"))
+        assert dataclasses.replace(rb, cfg=rx.cfg) == rx
+
+
+def test_sweep_mixed_backends_group_separately_and_preserve_order():
+    t = topology.build("flat_mesh", 16)
+    cfgs = [sim.SimConfig(cycles=250, warmup=50, inj_rate=0.4, seed=1,
+                          backend="xla"),
+            sim.SimConfig(cycles=250, warmup=50, inj_rate=0.4, seed=1,
+                          backend="pallas"),
+            sim.SimConfig(cycles=250, warmup=50, inj_rate=0.7, seed=2,
+                          backend="xla")]
+    rs = sweep.sweep(t, cfgs)
+    assert [r.cfg for r in rs] == cfgs
+    assert dataclasses.replace(rs[1], cfg=rs[0].cfg) == rs[0]
+
+
+def test_experiment_pallas_conservation_and_roundtrip():
+    """End-to-end through Experiment.run() with backend="pallas":
+    flit conservation holds exactly (warmup=0 counts everything), the
+    report matches the XLA oracle, and the backend survives JSON."""
+    exp = experiment.Experiment(
+        topology=TopologySpec("ring_mesh", 16),
+        budget=experiment.Budget(cycles=300, warmup=0, backend="pallas"),
+        inj_rate=0.8, seed=9)
+    rep = exp.run()
+    r = rep.sim
+    assert r.lost == 0
+    assert r.offered == r.delivered + r.dropped + r.in_flight
+    oracle = dataclasses.replace(
+        exp, budget=dataclasses.replace(exp.budget, backend="xla")).run()
+    assert r.row() == oracle.sim.row()
+    back = experiment.Report.from_json(rep.to_json())
+    assert back == rep
+    assert back.experiment.budget.backend == "pallas"
