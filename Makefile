@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: collect test test-dist dryrun-smoke bench-quick bench-kernels lint
+.PHONY: collect test test-dist dryrun-smoke bench-quick bench-kernels \
+        bench-traces lint
 
 # Lint gate (pinned config: ruff.toml).  ruff is optional in the
 # container; skip cleanly when `python -m ruff` is absent rather than
@@ -21,20 +22,26 @@ collect: lint
 	$(PY) -m pytest --collect-only -q
 	$(PY) -c "import benchmarks.run, benchmarks.noc_tables, \
 	          benchmarks.serial_baseline, benchmarks.kernel_micro, \
-	          repro.kernels.noc_step"
+	          benchmarks.trace_replay, repro.kernels.noc_step, \
+	          repro.trace"
 
 # CI-sized benchmark: small sim grids (including the experiment_grid_smoke
 # table — one Experiment.run_grid over the collective + weighted-hotspot
-# registry specs) + the sweep/experiment/kernel-backend equivalence tests.
+# registry specs) + the sweep/experiment/kernel-backend/trace tests.
 bench-quick:
 	$(PY) -m benchmarks.run --quick --terse --no-baseline
 	$(PY) -m pytest -q tests/test_sweep.py tests/test_experiment.py \
-	      tests/test_noc_kernel.py
+	      tests/test_noc_kernel.py tests/test_trace.py
 
 # Kernel microbenchmarks only (attention/SSD + the fused noc_step kernel
 # vs its XLA scan oracle at 64/256/1024 PEs).
 bench-kernels:
 	$(PY) -m benchmarks.run --only kernel_micro --terse
+
+# Trace replay only: the three mined collective schedules on both
+# topologies at 64/256/1024 PEs (writes BENCH_noc_quick.json).
+bench-traces:
+	$(PY) -m benchmarks.run --only trace_replay --terse
 
 test: collect
 	$(PY) -m pytest -x -q

@@ -25,6 +25,7 @@ import time
 import jax
 
 from benchmarks import kernel_micro, noc_tables, serial_baseline
+from benchmarks import trace_replay as trace_replay_mod
 from repro.core import sweep
 
 RESULTS: dict = {"tables": {}}
@@ -137,6 +138,8 @@ def main() -> None:
          {"sizes": (16, 64)}, True),
         ("experiment_grid_smoke", noc_tables.experiment_grid_smoke,
          {}, False),
+        ("trace_replay", trace_replay_mod.trace_replay,
+         {"quick": args.quick}, True),
         ("paper_validation_c1_c8", noc_tables.paper_validation, {}, False),
     ]
 

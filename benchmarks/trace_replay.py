@@ -1,0 +1,79 @@
+"""Trace-replay benchmark: real collective schedules as NoC workloads.
+
+The headline the statistical tables cannot give (DESIGN.md §12): how long
+does each of the mined ``collective_schedules.json`` DP gradient-reduction
+schedules (flat / hier / hier_int8) take to *complete* — every phase
+barrier respected — on ring-mesh vs flat-mesh at 64/256/1024 PEs?  Each
+(topology, size) runs its three schedule traces as one
+``Experiment.run_grid`` dispatch through the batched sweep engine; the
+derived line is the flat-mesh / ring-mesh completion-cycle ratio per
+schedule (geometric mean over sizes).
+
+Byte volumes are normalized (``normalize_flits``) so the largest per-PE
+phase burst is a fixed flit count — the mined schedules move gigabytes,
+and the int32 latency-sum envelope bounds cycles x buffer capacity — with
+the applied scale recorded on every TraceSpec.  Relative per-phase volumes
+(the thing the topology comparison measures) are preserved.
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.noc_tables import _spec
+from repro import trace as tr
+from repro.core.experiment import Budget, Experiment
+
+# Cycle budgets sized ~2x above observed completion (worst case: flat
+# schedule on ring-mesh — 458 @ 64, 891 @ 256, 1683 @ 1024), inside the
+# int32 lat_sum envelope (cycles x cap_total < 2^31; flat-mesh 1024 has
+# cap_total 19968 -> < ~107k cycles).  The scan always runs the full
+# budget, so slack is wall-clock.
+_BUDGETS = {16: 800, 64: 1200, 256: 2000, 1024: 4000}
+
+
+def trace_replay(sizes=(64, 256, 1024), normalize_flits: int = 8,
+                 quick: bool = False):
+    """(rows, derived) for the BENCH ``trace_replay`` table."""
+    if quick:
+        sizes = tuple(s for s in sizes if s <= 64) or (64,)
+    rows = []
+    ratios: dict[str, list[float]] = {}
+    for n in sizes:
+        traces = tr.traces_for_schedules(
+            n, pod_size=16, algorithm="halving_doubling",
+            normalize_flits=normalize_flits)
+        budget = Budget(cycles=_BUDGETS[n], warmup=0)
+        done: dict[tuple, int] = {}
+        for topo_name in ("ring_mesh", "flat_mesh"):
+            exp = Experiment(topology=_spec(topo_name, n),
+                             traffic=next(iter(traces.values())),
+                             budget=budget, inj_rate=1.0, seed=1)
+            reports = exp.run_grid(traffics=tuple(traces.values()))
+            for sched, rep in zip(traces, reports):
+                assert rep.sim.trace_completed, (
+                    f"{sched}@{n} on {topo_name} did not complete in "
+                    f"{budget.cycles} cycles: {rep.sim.phase_done}")
+                assert rep.sim.lost == 0, "conservation violated"
+                cc = rep.completion_cycles
+                done[(sched, topo_name)] = cc
+                lats = rep.phase_latencies
+                rows.append({
+                    "schedule": sched, "n_pes": n, "topology": topo_name,
+                    "n_phases": rep.sim.n_phases,
+                    "completion_cycles": cc,
+                    "max_phase_lat": max(lats),
+                    "mean_phase_lat": round(sum(lats) / len(lats), 1),
+                    "delivered": rep.sim.delivered,
+                    "total_w": rep.row()["total_w"],
+                })
+        for sched in traces:
+            ratios.setdefault(sched, []).append(
+                done[(sched, "flat_mesh")] / done[(sched, "ring_mesh")])
+
+    def gmean(xs):
+        return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+    derived = " ".join(
+        f"{sched}: flat/ring completion {gmean(rs):.2f}x"
+        for sched, rs in ratios.items())
+    return rows, derived

@@ -54,5 +54,26 @@ class NoCExperimentConfig:
             for t in traffics
         ]
 
+    def trace_experiments(self, n_pes: int = 64,
+                          families=("ring_mesh", "flat_mesh"),
+                          cycles: int = 4000, pod_size: int = 16,
+                          normalize_flits: int = 8,
+                          seed: int = 1) -> list[Experiment]:
+        """Trace-replay grid (DESIGN.md §12): the three mined collective
+        schedules (``experiments/hillclimb/collective_schedules.json``)
+        replayed phase-gated on each topology family.  Completion cycles
+        and per-phase latencies land on each ``Report``."""
+        from repro import trace as trace_mod
+
+        traces = trace_mod.traces_for_schedules(
+            n_pes, pod_size=pod_size, normalize_flits=normalize_flits)
+        budget = Budget(cycles=cycles, warmup=0)
+        return [
+            Experiment(topology=self.topology_spec(f, n_pes), traffic=t,
+                       budget=budget, inj_rate=1.0, seed=seed)
+            for f in families
+            for t in traces.values()
+        ]
+
 
 CONFIG = NoCExperimentConfig()

@@ -188,6 +188,19 @@ class Report:
                 "diameter": self.analytic.diameter,
                 "bisection_links": self.analytic.bisection_links}
 
+    # -- trace replay views (DESIGN.md §12) --------------------------------
+    @property
+    def completion_cycles(self) -> int:
+        """Cycles to drain a trace workload end to end (-1 when the
+        budget ran out, or for statistical traffic)."""
+        return self.sim.completion_cycles
+
+    @property
+    def phase_latencies(self) -> tuple[int, ...]:
+        """Per-phase cycle cost of a trace replay (empty when the traffic
+        is statistical)."""
+        return self.sim.phase_latencies()
+
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         return {"experiment": self.experiment.to_dict(),
@@ -249,4 +262,5 @@ def _sim_result_to_dict(r: sim.SimResult) -> dict:
 def _sim_result_from_dict(d: dict) -> sim.SimResult:
     d = dict(d)
     d["cfg"] = _sim_config_from_dict(d["cfg"])
+    d["phase_done"] = tuple(d.get("phase_done", ()))  # JSON lists -> tuple
     return sim.SimResult(**d)

@@ -102,7 +102,11 @@ class SimConfig:
             raise ValueError(
                 f"warmup must satisfy 0 <= warmup < cycles, got "
                 f"warmup={self.warmup} cycles={self.cycles}")
-        traffic.resolve(self.pattern)  # raises on unknown pattern strings
+        spec = traffic.resolve(self.pattern)  # raises on unknown patterns
+        if spec.is_trace and self.warmup != 0:
+            raise ValueError(
+                "trace replay needs warmup=0: per-phase completion cycles "
+                "count from cycle 0 and every injected flit is workload")
         if not 0 <= self.locality_ringlet + self.locality_block <= 1:
             raise ValueError("locality fractions must sum to <= 1")
         if isinstance(self.pattern, traffic.TrafficSpec) and (
@@ -136,9 +140,40 @@ class SimResult:
     throughput: float           # delivered packets / cycle
     flit_hops_per_cycle: float  # link traversals / cycle (activity factor)
     per_pe_throughput: float
+    # Trace replay only (DESIGN.md §12): the cycle each phase's last flit
+    # retired, -1 for phases the cycle budget did not complete.  Empty for
+    # statistical traffic.
+    phase_done: tuple = ()
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.phase_done)
+
+    @property
+    def trace_completed(self) -> bool:
+        """True when every phase of a trace replay finished in budget."""
+        return bool(self.phase_done) and self.phase_done[-1] >= 0
+
+    @property
+    def completion_cycles(self) -> int:
+        """Cycles to drain the whole trace (last phase's completion cycle
+        + 1, since cycles are 0-based); -1 if the budget ran out."""
+        if not self.trace_completed:
+            return -1
+        return self.phase_done[-1] + 1
+
+    def phase_latencies(self) -> tuple[int, ...]:
+        """Per-phase cycle cost: completion-cycle deltas between
+        consecutive phase barriers (phase 0 counts from cycle 0).
+        Incomplete phases report -1."""
+        out, prev = [], -1
+        for d in self.phase_done:
+            out.append(d - prev if d >= 0 else -1)
+            prev = d
+        return tuple(out)
 
     def row(self) -> dict:
-        return {
+        r = {
             "topology": self.topology, "n_pes": self.n_pes,
             "pattern": traffic.name_of(self.cfg.pattern),
             "inj_rate": self.cfg.inj_rate,
@@ -150,6 +185,11 @@ class SimResult:
             "dropped": self.dropped, "lost": self.lost,
             "in_flight": self.in_flight,
         }
+        if self.phase_done:
+            r["n_phases"] = self.n_phases
+            r["completion_cycles"] = self.completion_cycles
+            r["phase_latencies"] = list(self.phase_latencies())
+        return r
 
 
 def pattern_destinations(pattern: Union[str, traffic.TrafficSpec],
@@ -174,12 +214,19 @@ class SweepPoint:
     seed: jax.Array
     use_perm: jax.Array
     perm_dst: jax.Array  # [n_pes] int32
+    # Trace replay tables (DESIGN.md §12): [n_phases, n_pes] int32 per-phase
+    # destination map and flit counts.  Statistical points carry the empty
+    # [0, n_pes] shape, which is static, so trace-ness (and the phase
+    # count) is part of the compile key while the tables stay traced data —
+    # grids of different traces on one topology share one executable.
+    ph_dst: jax.Array
+    ph_flits: jax.Array
 
 
 jax.tree_util.register_dataclass(
     SweepPoint,
     data_fields=["inj_rate", "loc_ring", "loc_block", "seed", "use_perm",
-                 "perm_dst"],
+                 "perm_dst", "ph_dst", "ph_flits"],
     meta_fields=[])
 
 
@@ -197,13 +244,14 @@ class Metrics:
     wins_by_kind: jax.Array       # [8]
     stall_next_kind: jax.Array    # [8]
     q_len_by_kind: jax.Array      # [8]
+    phase_done: jax.Array         # [n_phases] int32 ([0] when statistical)
 
 
 jax.tree_util.register_dataclass(
     Metrics,
     data_fields=["delivered", "offered", "accepted", "dropped", "lost",
                  "lat_sum", "moved", "in_flight", "wins_by_kind",
-                 "stall_next_kind", "q_len_by_kind"],
+                 "stall_next_kind", "q_len_by_kind", "phase_done"],
     meta_fields=[])
 
 
@@ -227,6 +275,13 @@ def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
                 f"[{n_pes}] with entries in [0, {n_pes})")
         perm = perm.astype(np.int32)
     loc_ring, loc_block = cfg.effective_locality()
+    if spec.is_trace:
+        ph_dst, ph_flits = spec.trace_arrays(n_pes)
+        ph_dst = np.asarray(ph_dst, np.int32)
+        ph_flits = np.asarray(ph_flits, np.int32)
+    else:
+        ph_dst = np.zeros((0, n_pes), np.int32)
+        ph_flits = np.zeros((0, n_pes), np.int32)
     return SweepPoint(
         inj_rate=np.float32(cfg.inj_rate),
         loc_ring=np.float32(loc_ring),
@@ -234,6 +289,8 @@ def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
         seed=np.int32(cfg.seed),
         use_perm=np.bool_(use_perm),
         perm_dst=np.asarray(perm, np.int32),
+        ph_dst=ph_dst,
+        ph_flits=ph_flits,
     )
 
 
@@ -403,25 +460,39 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
     assert cycles * geom.cap_total < (1 << 31), \
         "int32 lat_sum could overflow for this (cycles, topology) budget"
 
+    # Trace replay (DESIGN.md §12): the phase tables ride the point as
+    # traced data, but their [n_phases, P] *shape* is static, so this
+    # branch specializes the executable without adding a dynamic check.
+    n_phases = int(point.ph_dst.shape[0])
+    trace = None
+    if n_phases:
+        trace = (point.ph_dst, point.ph_flits,
+                 jnp.sum(point.ph_flits, axis=1, dtype=jnp.int32))
+
     # The step math is shared with the fused kernel (kernels.noc_step):
     # "xla" scans it (the bit-exact oracle), "pallas" runs the whole loop
     # as one kernel with the carry in VMEM scratch.
     if backend == "pallas":
-        ql, m_scal, m_kind = noc_step.run_fused(
+        out = noc_step.run_fused(
             geom, inj_s, dst_s, cycles=cycles, warmup=warmup,
             starvation_limit=starvation_limit, arb_iters=arb_iters,
-            diagnostics=diagnostics)
+            trace=trace, diagnostics=diagnostics)
+        ql, m_scal, m_kind = out[:3]
+        ph_done = out[3] if n_phases else jnp.zeros((0,), jnp.int32)
     elif backend == "xla":
         def step(carry, xs):
             cycle, inj, dst = xs
             return noc_step.cycle_step(
                 geom, carry, cycle, inj, dst, warmup=warmup,
                 starvation_limit=starvation_limit, arb_iters=arb_iters,
-                diagnostics=diagnostics), None
+                trace=trace, diagnostics=diagnostics), None
 
-        carry0 = noc_step.initial_state(L, geom.depth)
+        carry0 = noc_step.initial_state(L, geom.depth, n_pes=P,
+                                        n_phases=n_phases)
         xs = (jnp.arange(cycles, dtype=jnp.int32), inj_s, dst_s)
-        (_, ql, _, m_scal, m_kind), _ = jax.lax.scan(step, carry0, xs)
+        final, _ = jax.lax.scan(step, carry0, xs)
+        ql, m_scal, m_kind = final[1], final[3], final[4]
+        ph_done = final[8] if n_phases else jnp.zeros((0,), jnp.int32)
     else:  # pragma: no cover - SimConfig validates before tracing
         raise ValueError(f"unknown simulator backend {backend!r}")
 
@@ -437,7 +508,8 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
         wins_by_kind=m_kind[noc_step.KIND_WINS],
         stall_next_kind=m_kind[noc_step.KIND_STALLS],
         q_len_by_kind=jnp.sum(jnp.where(kind_oh, ql[None, :], 0), axis=1,
-                              dtype=jnp.int32))
+                              dtype=jnp.int32),
+        phase_done=ph_done)
 
 
 _run_single = jax.jit(
@@ -478,6 +550,7 @@ def _to_result(topo: topo_mod.Topology, cfg: SimConfig,
         throughput=delivered / mc,
         flit_hops_per_cycle=int(m.moved) / mc,
         per_pe_throughput=delivered / mc / topo.n_pes,
+        phase_done=tuple(int(d) for d in np.asarray(m.phase_done)),
     )
 
 

@@ -65,18 +65,20 @@ _AOT_LOCK = threading.Lock()
 _XLA_COMPILES = 0
 
 
-def _static_key(geom: sim.Geometry, batch: int, cycles: int, warmup: int,
-                starv: int, backend: str, arb_iters: int) -> tuple:
+def _static_key(geom: sim.Geometry, batch: int, trace_shape: tuple,
+                cycles: int, warmup: int, starv: int, backend: str,
+                arb_iters: int) -> tuple:
     return (geom.n_links, geom.n_phys, geom.n_pes, geom.depth,
-            geom.cand.shape, geom.intab.shape, batch, cycles, warmup, starv,
-            backend, arb_iters)
+            geom.cand.shape, geom.intab.shape, batch, trace_shape, cycles,
+            warmup, starv, backend, arb_iters)
 
 
 def _executable(geom: sim.Geometry, points: sim.SweepPoint, cycles: int,
                 warmup: int, starv: int, backend: str = "xla",
                 arb_iters: int = sim.ARB_ITERS):
     global _XLA_COMPILES
-    key = _static_key(geom, points.seed.shape[0], cycles, warmup, starv,
+    key = _static_key(geom, points.seed.shape[0],
+                      tuple(points.ph_dst.shape), cycles, warmup, starv,
                       backend, arb_iters)
     with _AOT_LOCK:
         exe = _AOT.get(key)
@@ -104,10 +106,14 @@ def _grouped(topo: topo_mod.Topology, cfgs: Sequence[sim.SimConfig]):
     geom = sim.build_geometry(topo)
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cfgs):
+        # The trace phase count is an array *shape*, so points can only
+        # stack (and share an executable) with equal phase counts;
+        # statistical points all have n_trace_phases == 0.
+        n_phases = traffic.resolve(c.pattern).n_trace_phases
         groups.setdefault((c.cycles, c.warmup, c.starvation_limit,
-                           c.backend), []).append(i)
-    return geom, [(key, idxs, _stack_points([cfgs[i] for i in idxs],
-                                            topo.n_pes))
+                           c.backend, n_phases), []).append(i)
+    return geom, [(key[:4], idxs, _stack_points([cfgs[i] for i in idxs],
+                                                topo.n_pes))
                   for key, idxs in groups.items()]
 
 

@@ -42,6 +42,22 @@ from repro.core import packet as pk
 
 _REGISTRY: dict[str, type["TrafficSpec"]] = {}
 
+# Kinds whose spec classes live outside ``repro.core`` (open-registry
+# layering: core never imports them).  ``resolve``/``from_dict`` import the
+# owning module on first sight of the kind, so deserializing e.g. a trace
+# report works without the caller pre-importing ``repro.trace``.
+_LAZY_KINDS = {"trace": "repro.trace"}
+
+
+def _lookup(kind: str) -> Optional[type["TrafficSpec"]]:
+    cls = _REGISTRY.get(kind)
+    if cls is None and kind in _LAZY_KINDS:
+        import importlib
+
+        importlib.import_module(_LAZY_KINDS[kind])
+        cls = _REGISTRY.get(kind)
+    return cls
+
 
 def register(cls: type["TrafficSpec"]) -> type["TrafficSpec"]:
     """Class decorator: add a TrafficSpec subclass to the registry."""
@@ -69,7 +85,7 @@ def resolve(pattern: Union[str, "TrafficSpec"]) -> "TrafficSpec":
     (default-constructed spec), instances pass through."""
     if isinstance(pattern, TrafficSpec):
         return pattern
-    cls = _REGISTRY.get(pattern)
+    cls = _lookup(pattern)
     if cls is None:
         raise ValueError(
             f"unknown pattern {pattern!r}; registered: {names()}")
@@ -112,6 +128,7 @@ class TrafficSpec:
     kind: ClassVar[str] = ""
     is_permutation: ClassVar[bool] = False  # destinations() is a bijection
     self_free: ClassVar[bool] = False       # no source targets itself
+    is_trace: ClassVar[bool] = False        # phased replay (repro.trace)
 
     def __post_init__(self):
         if not 0 <= self.locality_ringlet + self.locality_block <= 1:
@@ -119,6 +136,17 @@ class TrafficSpec:
 
     def destinations(self, n_pes: int) -> Optional[np.ndarray]:
         raise NotImplementedError
+
+    # -- trace protocol (overridden by repro.trace.Trace) -------------------
+    @property
+    def n_trace_phases(self) -> int:
+        """Phase count for trace specs; 0 marks statistical traffic."""
+        return 0
+
+    def trace_arrays(self, n_pes: int) -> tuple[np.ndarray, np.ndarray]:
+        """Per-phase ``(dst [n_phases, P], flits [n_phases, P])`` int32
+        arrays for the phase-gated replay; only valid when ``is_trace``."""
+        raise NotImplementedError(f"{self.kind!r} is not a trace spec")
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -134,7 +162,7 @@ class TrafficSpec:
     def from_dict(d: dict) -> "TrafficSpec":
         d = dict(d)
         kind = d.pop("kind")
-        cls = _REGISTRY.get(kind)
+        cls = _lookup(kind)
         if cls is None:
             raise ValueError(
                 f"unknown traffic kind {kind!r}; registered: {names()}")

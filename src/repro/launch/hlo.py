@@ -35,6 +35,8 @@ _LINE_RE = re.compile(
     r"(-start)?\(")
 _IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_PAIR_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_PAIR_ITEM_RE = re.compile(r"\{(\d+),(\d+)\}")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -55,26 +57,55 @@ def _group_size(line: str) -> int:
     return 1
 
 
-def collective_bytes(hlo_text: str) -> dict:
-    """Per-device operand bytes per collective kind (see module docstring)."""
-    by_kind: dict[str, int] = defaultdict(int)
-    counts: Counter = Counter()
+def _permute_pairs(line: str) -> list[tuple[int, int]]:
+    m = _PAIR_RE.search(line)
+    if not m:
+        return []
+    return [(int(a), int(b)) for a, b in _PAIR_ITEM_RE.findall(m.group(1))]
+
+
+def collective_ops(hlo_text: str) -> list[dict]:
+    """Every collective op in program order, one dict per op:
+    ``{"kind", "bytes" (per-device operand bytes), "group_size",
+    "pairs" (collective-permute's source_target_pairs, else [])}``.
+    This is the per-op census ``repro.trace.hlo_to_trace`` replays;
+    ``collective_bytes`` aggregates it.
+
+    Async ``-start`` ops print a ``(operand, result)`` tuple shape; only
+    the result (last) shape is counted, so start/done pairs contribute
+    exactly once and tuple results are not double-counted.
+    """
+    ops = []
     for line in hlo_text.splitlines():
         m = _LINE_RE.search(line)
         if not m:
             continue
-        kind = m.group(2)
-        result_bytes = sum(_shape_bytes(sm.group(1), sm.group(2))
-                           for sm in _SHAPE_RE.finditer(m.group(1)))
-        gs = _group_size(line)
+        kind, is_start = m.group(2), bool(m.group(3))
+        shapes = [_shape_bytes(sm.group(1), sm.group(2))
+                  for sm in _SHAPE_RE.finditer(m.group(1))]
+        if not shapes:
+            continue
+        result_bytes = shapes[-1] if is_start else sum(shapes)
+        pairs = _permute_pairs(line) if kind == "collective-permute" else []
+        gs = len(pairs) if pairs else _group_size(line)
         if kind == "all-gather":
             nbytes = result_bytes // max(gs, 1)
         elif kind == "reduce-scatter":
             nbytes = result_bytes * gs
         else:
             nbytes = result_bytes
-        by_kind[kind] += nbytes
-        counts[kind] += 1
+        ops.append({"kind": kind, "bytes": int(nbytes), "group_size": gs,
+                    "pairs": pairs})
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device operand bytes per collective kind (see module docstring)."""
+    by_kind: dict[str, int] = defaultdict(int)
+    counts: Counter = Counter()
+    for op in collective_ops(hlo_text):
+        by_kind[op["kind"]] += op["bytes"]
+        counts[op["kind"]] += 1
     return {"bytes_by_kind": dict(by_kind),
             "count_by_kind": dict(counts),
             "total_bytes": int(sum(by_kind.values()))}

@@ -41,6 +41,43 @@ def test_op_census_and_fusions():
     assert hlo.fusion_count(txt) == 2
 
 
+# Canned fixture covering the trace-relevant ops: all-to-all, an async
+# -start whose tuple result must not double-count, and collective-permutes
+# with explicit source_target_pairs (ring decode attention's ppermute).
+SAMPLE_TRACE = """
+  %a2a = f32[64,8]{1,0} all-to-all(%x), replica_groups=[1,8]<=[8], dimensions={1}
+  %ags = (f32[16]{0}, f32[64]{0}) all-gather-start(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[64]{0} all-gather-done(%ags)
+  %cp0 = bf16[128]{0} collective-permute(%k), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %cp1 = bf16[128]{0} collective-permute(%v), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+"""
+
+
+def test_collective_ops_all_to_all_and_permute():
+    ops = hlo.collective_ops(SAMPLE_TRACE)
+    assert [o["kind"] for o in ops] == [
+        "all-to-all", "all-gather", "collective-permute",
+        "collective-permute"]
+    a2a = ops[0]
+    assert a2a["bytes"] == 64 * 8 * 4 and a2a["group_size"] == 8
+    cp = ops[2]
+    assert cp["bytes"] == 128 * 2
+    assert cp["pairs"] == [(0, 1), (1, 2), (2, 3), (3, 0)]
+    by = hlo.collective_bytes(SAMPLE_TRACE)["bytes_by_kind"]
+    assert by["all-to-all"] == 64 * 8 * 4
+    assert by["collective-permute"] == 2 * 128 * 2
+
+
+def test_async_start_tuple_not_double_counted():
+    ops = hlo.collective_ops(SAMPLE_TRACE)
+    ag = ops[1]
+    # (operand f32[16], result f32[64]) tuple: only the result shape
+    # counts, then / group size for all-gather's operand bytes.
+    assert ag["bytes"] == 64 * 4 // 4
+    counts = hlo.collective_bytes(SAMPLE_TRACE)["count_by_kind"]
+    assert counts["all-gather"] == 1  # -done not counted either
+
+
 # ---------------------------------------------------------------------------
 # shapes / cells
 # ---------------------------------------------------------------------------

@@ -1,0 +1,271 @@
+"""Trace subsystem tests (DESIGN.md §12): TraceSpec validation and JSON
+round-trips, the schedule/dist/HLO extractors, the phase-gated replay's
+dependency semantics (phase i+1 must not inject before phase i's last
+delivery), xla/pallas bit-identity on trace workloads, and the
+trace x topology Experiment grid path."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import trace as tr
+from repro.core import experiment, sim, topology, traffic
+from repro.core.spec import TopologySpec
+
+P16 = 16
+
+
+def _two_phase():
+    # phase 0: 0->8 / 1->9 (3 flits each); phase 1: the reverse direction.
+    return tr.from_records(P16, [
+        [(0, 8, 3), (1, 9, 3)],
+        [(8, 0, 2), (9, 1, 2)],
+    ])
+
+
+def _run(topo, pattern, cycles=400, backend="xla", inj_rate=1.0, seed=0):
+    return sim.simulate(topo, sim.SimConfig(
+        cycles=cycles, warmup=0, inj_rate=inj_rate, pattern=pattern,
+        seed=seed, backend=backend))
+
+
+# ---------------------------------------------------------------------------
+# TraceSpec contract
+# ---------------------------------------------------------------------------
+def test_flits_for_bytes():
+    assert tr.flits_for_bytes(0) == 0
+    assert tr.flits_for_bytes(1) == 1              # sub-flit rounds up
+    assert tr.flits_for_bytes(32) == 1
+    assert tr.flits_for_bytes(33) == 2
+    assert tr.flits_for_bytes(1 << 20, scale=1 << 10) == 32
+    assert tr.flits_for_bytes(1, scale=1e9) == 1   # scaled phases persist
+    assert tr.FLIT_BYTES == 32                     # documented default
+    with pytest.raises(ValueError):
+        tr.flits_for_bytes(-1)
+    with pytest.raises(ValueError):
+        tr.flits_for_bytes(8, flit_bytes=0)
+
+
+def test_tracespec_validation():
+    ok = tr.TraceSpec(n_pes=4, phases=(((0, 1, 2),),))
+    assert ok.n_phases == 1 and ok.total_flits == 2
+    with pytest.raises(ValueError, match="at least one phase"):
+        tr.TraceSpec(n_pes=4, phases=())
+    with pytest.raises(ValueError, match="targets itself"):
+        tr.TraceSpec(n_pes=4, phases=(((1, 1, 2),),))
+    with pytest.raises(ValueError, match="out of range"):
+        tr.TraceSpec(n_pes=4, phases=(((0, 9, 2),),))
+    with pytest.raises(ValueError, match="flits > 0"):
+        tr.TraceSpec(n_pes=4, phases=(((0, 1, 0),),))
+    with pytest.raises(ValueError, match="sub-phases"):
+        tr.TraceSpec(n_pes=4, phases=(((0, 1, 2), (0, 2, 2)),))
+    with pytest.raises(ValueError, match="earlier phase"):
+        tr.TraceSpec(n_pes=4, phases=(((0, 1, 1),), ((1, 0, 1),)),
+                     deps=((), (1,)))
+
+
+def test_tracespec_arrays_and_deps():
+    spec = _two_phase().trace
+    dst, flits = spec.arrays()
+    assert dst.shape == (2, P16) and flits.dtype == np.int32
+    assert flits[0, 0] == 3 and dst[0, 0] == 8
+    assert flits[0, 2] == 0                        # idle source
+    assert spec.dependencies() == ((), (0,))       # default chain
+
+
+def test_tracespec_json_roundtrip():
+    spec = _two_phase().trace
+    again = tr.TraceSpec.from_json(spec.to_json())
+    assert again == spec
+    # and through the traffic registry (lazy "trace" kind registration)
+    t = tr.Trace(trace=spec)
+    d = json.loads(json.dumps(t.to_dict()))
+    t2 = traffic.TrafficSpec.from_dict(d)
+    assert isinstance(t2, tr.Trace) and t2.trace == spec
+
+
+def test_trace_traffic_spec_guards():
+    spec = _two_phase().trace
+    with pytest.raises(ValueError, match="locality"):
+        tr.Trace(trace=spec, locality_ringlet=0.5)
+    with pytest.raises(ValueError, match="re-extract"):
+        tr.Trace(trace=spec).trace_arrays(64)
+    with pytest.raises(ValueError, match="warmup=0"):
+        sim.SimConfig(pattern=tr.Trace(trace=spec), warmup=100, cycles=300)
+
+
+# ---------------------------------------------------------------------------
+# Extractors
+# ---------------------------------------------------------------------------
+def test_load_schedules_and_unknown_kind():
+    scheds = tr.load_schedules()
+    assert set(scheds) == {"flat", "hier", "hier_int8"}
+    with pytest.raises(ValueError, match="unknown collective kind"):
+        tr.schedule_to_trace(
+            {"bytes_by_kind": {"all-shuffle": 100}}, 64)
+    # loader-side validation too, with the kind list in the message
+    bad = json.dumps({"s": {"bytes_by_kind": {"bogus-kind": 1}}})
+    path = "/tmp/bad_schedules.json"
+    with open(path, "w") as f:
+        f.write(bad)
+    with pytest.raises(ValueError, match="bogus-kind"):
+        tr.load_schedules(path)
+
+
+def test_schedule_decompositions():
+    # ring all-reduce over g PEs: 2(g-1) phases of B/g bytes each
+    census = {"bytes_by_kind": {"all-reduce": 64 * 8}}
+    spec = tr.schedule_to_trace(census, 8, algorithm="ring", flit_bytes=8)
+    assert spec.n_phases == 2 * 7
+    # every step moves the B/g = 64-byte shard = 8 flits at 8 B/flit
+    assert all(f == 8 for ph in spec.phases for _, _, f in ph)
+    # halving-doubling: 2 log2(g) phases, per-PE volume halves then doubles
+    spec = tr.schedule_to_trace(census, 8, algorithm="halving_doubling",
+                                flit_bytes=8)
+    assert spec.n_phases == 2 * 3
+    vols = [ph[0][2] for ph in spec.phases]
+    assert vols == [32, 16, 8, 8, 16, 32]
+    # total moved volume matches the bandwidth-optimal 2B(1-1/g) per PE
+    assert spec.total_flits == 8 * sum(vols)
+
+
+def test_hierarchical_groups():
+    census = {"bytes_by_kind": {"reduce-scatter": 1024, "all-reduce": 256,
+                                "all-gather": 256}}
+    spec = tr.schedule_to_trace(census, 64, pod_size=16, algorithm="ring")
+    # RS: in-pod (dst within the same 16-PE pod); AR: cross-pod (stride 16)
+    ph_rs = spec.phases[0]
+    assert all(s // 16 == d // 16 for s, d, _ in ph_rs)
+    ph_ar = spec.phases[15]        # first all-reduce phase after 15 RS
+    assert all(s % 16 == d % 16 and s != d for s, d, _ in ph_ar)
+    with pytest.raises(ValueError, match="pod_size"):
+        tr.schedule_to_trace(census, 64, pod_size=7)
+
+
+def test_dist_to_trace_variants():
+    flat = tr.dist_to_trace("flat", 64, 1 << 20, normalize_flits=4)
+    hier = tr.dist_to_trace("hier", 64, 1 << 20, pod_size=16,
+                            normalize_flits=4)
+    int8 = tr.dist_to_trace("hier_int8", 64, 1 << 20, pod_size=16,
+                            normalize_flits=4)
+    assert flat.n_phases == 2 * 63
+    # hier: RS(15) + cross-pod AR(2*3) + AG(15)
+    assert hier.n_phases == 15 + 6 + 15
+    # int8: in-pod AR(2*15) + cross-pod AG(3)
+    assert int8.n_phases == 30 + 3
+    assert int8.scale > 1.0        # normalization recorded on the spec
+    with pytest.raises(ValueError, match="unknown dist schedule"):
+        tr.dist_to_trace("ring", 64, 1024)
+
+
+def test_hlo_to_trace_permute_pairs():
+    hlo_text = """
+      %cp = bf16[128]{0} collective-permute(%k), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+      %ar = f32[256]{0} all-reduce(%x), replica_groups=[1,4]<=[4]
+    """
+    spec = tr.hlo_to_trace(hlo_text, 4, flit_bytes=32, algorithm="ring")
+    # permute = 1 phase with the exact pair map, then ring AR (2*3 phases)
+    assert spec.n_phases == 1 + 6
+    assert spec.phases[0] == ((0, 1, 8), (1, 2, 8), (2, 3, 8), (3, 0, 8))
+    with pytest.raises(ValueError, match="no collective ops"):
+        tr.hlo_to_trace("%f = f32[4]{0} fusion(%a)", 4)
+
+
+def test_permute_phase_splits_duplicate_sources():
+    phases = tr.permute_phase([(0, 1), (0, 2), (1, 3)], 4, 64)
+    assert len(phases) == 2                     # src 0 twice -> sub-phase
+    assert phases[0] == [(0, 1, 64), (1, 3, 64)]
+    assert phases[1] == [(0, 2, 64)]
+
+
+# ---------------------------------------------------------------------------
+# Replay semantics
+# ---------------------------------------------------------------------------
+def test_phase_gating_blocks_phase2_until_phase1_delivers():
+    """The dependency contract: phase 1's completion cycle strictly
+    precedes any phase-2 activity, and per-phase latencies reflect it."""
+    topo = topology.build_ring_mesh(P16)
+    r = _run(topo, _two_phase())
+    assert r.trace_completed
+    d0, d1 = r.phase_done
+    assert 0 < d0 < d1
+    # phase 1 injects at earliest at cycle d0 + 1 and needs at least one
+    # cycle in the network per flit: its completion is strictly later.
+    l0, l1 = r.phase_latencies()
+    assert l0 == d0 + 1 and l1 == d1 - d0 and l1 >= 2
+    assert r.completion_cycles == d1 + 1
+    # all workload flits were delivered, none dropped, none in flight
+    assert r.delivered == 10 and r.dropped == 0 and r.in_flight == 0
+    assert r.offered == r.delivered  # trace-mode conservation
+
+
+def test_phase_gating_throttled_injection_still_completes():
+    """inj_rate < 1 throttles bandwidth but the barrier semantics hold."""
+    topo = topology.build_ring_mesh(P16)
+    full = _run(topo, _two_phase(), inj_rate=1.0)
+    slow = _run(topo, _two_phase(), inj_rate=0.3, seed=3)
+    assert slow.trace_completed
+    assert slow.completion_cycles >= full.completion_cycles
+    assert slow.delivered == full.delivered == 10
+
+
+def test_budget_exhaustion_reports_incomplete():
+    topo = topology.build_ring_mesh(P16)
+    r = _run(topo, _two_phase(), cycles=6)
+    assert not r.trace_completed
+    assert r.completion_cycles == -1
+    assert -1 in r.phase_done
+    assert -1 in r.phase_latencies()
+
+
+@pytest.mark.parametrize("family", ["ring_mesh", "flat_mesh"])
+def test_backend_bit_identical_on_trace(family):
+    """xla vs pallas bit-identity on a real extracted schedule."""
+    topo = topology.build(family, P16)
+    spec = tr.Trace(trace=tr.dist_to_trace("flat", P16, 1 << 16,
+                                           normalize_flits=4))
+    kw = dict(cycles=500, warmup=0, inj_rate=1.0, pattern=spec, seed=0)
+    rx = sim.simulate(topo, sim.SimConfig(backend="xla", **kw))
+    rp = sim.simulate(topo, sim.SimConfig(backend="pallas", **kw))
+    assert dataclasses.replace(rp, cfg=rx.cfg) == rx, (rx.row(), rp.row())
+    assert rx.trace_completed
+
+
+# ---------------------------------------------------------------------------
+# Declarative layer: Experiment / run_grid / Report
+# ---------------------------------------------------------------------------
+def test_experiment_trace_grid_and_report_roundtrip():
+    traces = tr.traces_for_schedules(P16, pod_size=4)
+    exp = experiment.Experiment(
+        topology=TopologySpec("ring_mesh", P16),
+        traffic=traces["flat"], inj_rate=1.0,
+        budget=experiment.Budget(cycles=600, warmup=0))
+    reports = exp.run_grid(traffics=tuple(traces.values()))
+    assert len(reports) == 3
+    for rep in reports:
+        assert rep.sim.trace_completed, rep.row()
+        assert rep.completion_cycles > 0
+        assert len(rep.phase_latencies) == rep.sim.n_phases
+        assert all(l > 0 for l in rep.phase_latencies)
+        again = experiment.Report.from_json(rep.to_json())
+        assert again == rep
+        assert "completion_cycles" in rep.row()
+
+
+def test_trace_topology_grid_batches_with_statistical():
+    """Mixed trace + statistical configs on one topology sweep cleanly
+    (they land in different compile groups but one call handles both)."""
+    from repro.core import sweep as sweep_mod
+    topo = topology.build_ring_mesh(P16)
+    cfgs = [
+        sim.SimConfig(cycles=400, warmup=0, inj_rate=1.0,
+                      pattern=_two_phase(), seed=0),
+        sim.SimConfig(cycles=400, warmup=0, inj_rate=0.25,
+                      pattern="uniform", seed=0),
+    ]
+    rs = sweep_mod.sweep(topo, cfgs)
+    assert rs[0].trace_completed and rs[0].phase_done
+    assert rs[1].phase_done == ()
+    # batched result bit-identical to the single-point path
+    assert rs[0] == sim.simulate(topo, cfgs[0])
