@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: collect test test-dist dryrun-smoke bench-quick bench-kernels \
-        bench-traces lint
+        bench-traces bench-faults lint
 
 # Lint gate (pinned config: ruff.toml).  ruff is optional in the
 # container; skip cleanly when `python -m ruff` is absent rather than
@@ -22,8 +22,9 @@ collect: lint
 	$(PY) -m pytest --collect-only -q
 	$(PY) -c "import benchmarks.run, benchmarks.noc_tables, \
 	          benchmarks.serial_baseline, benchmarks.kernel_micro, \
-	          benchmarks.trace_replay, repro.kernels.noc_step, \
-	          repro.trace"
+	          benchmarks.trace_replay, benchmarks.fault_sweep, \
+	          repro.kernels.noc_step, repro.trace, repro.faults, \
+	          repro.faults.repair"
 
 # CI-sized benchmark: small sim grids (including the experiment_grid_smoke
 # table — one Experiment.run_grid over the collective + weighted-hotspot
@@ -31,7 +32,7 @@ collect: lint
 bench-quick:
 	$(PY) -m benchmarks.run --quick --terse --no-baseline
 	$(PY) -m pytest -q tests/test_sweep.py tests/test_experiment.py \
-	      tests/test_noc_kernel.py tests/test_trace.py
+	      tests/test_noc_kernel.py tests/test_trace.py tests/test_faults.py
 
 # Kernel microbenchmarks only (attention/SSD + the fused noc_step kernel
 # vs its XLA scan oracle at 64/256/1024 PEs).
@@ -42,6 +43,11 @@ bench-kernels:
 # topologies at 64/256/1024 PEs (writes BENCH_noc_quick.json).
 bench-traces:
 	$(PY) -m benchmarks.run --only trace_replay --terse
+
+# Resilience only: the fault_tolerance degradation/repair grid + the
+# trace stall-watchdog demo (writes BENCH_noc_quick.json).
+bench-faults:
+	$(PY) -m benchmarks.run --only fault --terse
 
 test: collect
 	$(PY) -m pytest -x -q

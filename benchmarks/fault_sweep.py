@@ -1,0 +1,149 @@
+"""Resilience benchmark: degradation curves under injected faults.
+
+The ``fault_tolerance`` table answers the robustness questions the
+healthy tables cannot (DESIGN.md §13): how gracefully does each topology
+degrade as fabric links die — delivered fraction, reachability, latency
+— and how much of the loss does the §5.1 repair morph (route tables
+rebuilt around the dead components) win back?  Every (family, size)
+runs its healthy point, its whole fault grid (dead-link count x seed,
+injected unrepaired as runtime drop masks), and its repaired twin
+through ``run_experiments`` — one batched, geometry-pipelined dispatch
+per topology, with fault lowering padded to shared buckets so the grid
+vmaps.
+
+``watchdog_demo`` exercises the trace-replay stall watchdog: a two-phase
+trace whose second phase needs a dead router.  Under strict barriers the
+replay cannot retire that phase's credits; the watchdog terminates it
+with a per-phase diagnostic (stalled phase, stall cycle, unretired
+credit) instead of spinning to budget exhaustion, while the default
+lenient-barrier run completes by retiring drops.
+"""
+from __future__ import annotations
+
+from benchmarks.noc_tables import _spec
+from repro import trace as tr
+from repro.core.experiment import Budget, Experiment, run_experiments
+from repro.faults import FaultSpec, sample_faults, suggest_repair_morph
+
+_CYCLES = {16: 600, 64: 800, 256: 1000, 1024: 1200}
+_COUNTS = (2, 4, 8)      # dead fabric links per scenario
+_SEEDS = (0, 1)          # fault-placement seeds
+_REPAIR_COUNT = 4        # the scenario measured with/without repair
+# Below saturation at every size (ring-mesh saturates earlier as PEs
+# grow under uniform traffic): degradation then measures faults, not
+# congestion (at saturating rates drops relieve the fabric and the
+# delivered fraction stops tracking fault severity).
+_INJ = {16: 0.1, 64: 0.1, 256: 0.04, 1024: 0.02}
+
+
+def fault_tolerance(sizes=(64, 256, 1024), quick: bool = False):
+    """(rows, derived) for the BENCH ``fault_tolerance`` table."""
+    if quick:
+        sizes = tuple(s for s in sizes if s <= 64) or (64,)
+        counts, seeds = (2, 4), (0,)
+    else:
+        counts, seeds = _COUNTS, _SEEDS
+
+    # Build every experiment first so run_experiments batches the whole
+    # resilience grid (one dispatch per topology spec, pipelined).
+    exps, tags = [], []
+    for n in sizes:
+        budget = Budget(cycles=_CYCLES[n], warmup=0)
+        inj = _INJ[n]
+        for fam in ("ring_mesh", "flat_mesh"):
+            spec = _spec(fam, n)
+            topo = spec.build()
+            scen = {(c, s): sample_faults(topo, n_dead_links=c, seed=s)
+                    for c in counts for s in seeds}
+            exps.append(Experiment(topology=spec, budget=budget,
+                                   inj_rate=inj))
+            tags.append((fam, n, 0, 0, "healthy"))
+            for (c, s), f in scen.items():
+                exps.append(Experiment(topology=spec, budget=budget,
+                                       inj_rate=inj, faults=f))
+                tags.append((fam, n, c, s, "faulted"))
+            rc = _REPAIR_COUNT if _REPAIR_COUNT in counts else counts[-1]
+            exps.append(Experiment(
+                topology=suggest_repair_morph(spec, scen[(rc, seeds[0])]),
+                budget=budget, inj_rate=inj))
+            tags.append((fam, n, rc, seeds[0], "repaired"))
+
+    reports = run_experiments(exps)
+
+    rows, healthy, gains = [], {}, []
+    for (fam, n, c, s, mode), rep in zip(tags, reports):
+        r = rep.sim
+        # The conservation identity (``dropped`` subsumes the exactness
+        # guard's ``lost``, which can be nonzero at 1024 PEs even
+        # healthy): every offered flit is delivered, dropped, or queued.
+        assert r.offered == r.delivered + r.dropped + r.in_flight, (
+            f"flits unaccounted for: {fam}_{n} {mode}")
+        if mode == "healthy":
+            healthy[(fam, n)] = rep
+        rows.append({
+            "topology": fam, "n_pes": n, "mode": mode,
+            "n_dead_links": c, "fault_seed": s,
+            "reachability": round(rep.reachability, 4),
+            "delivered_fraction": round(rep.delivered_fraction, 4),
+            "avg_latency": round(r.avg_latency, 2),
+            "latency_inflation":
+                round(rep.latency_inflation(healthy[(fam, n)]), 3),
+            "dropped": r.dropped,
+        })
+    # Repair gain: repaired vs its unrepaired twin (same fault scenario).
+    by_tag = dict(zip(tags, reports))
+    for (fam, n, c, s, mode), rep in by_tag.items():
+        if mode == "repaired":
+            twin = by_tag[(fam, n, c, s, "faulted")]
+            gains.append(rep.delivered_fraction - twin.delivered_fraction)
+
+    worst = {}
+    for row in rows:
+        if row["mode"] == "faulted" and row["n_dead_links"] == counts[-1]:
+            worst.setdefault(row["topology"], []).append(
+                row["delivered_fraction"])
+    derived = " ".join(
+        f"{fam}: deliv frac {sum(v) / len(v):.3f} @{counts[-1]} dead links"
+        for fam, v in worst.items())
+    derived += (f"; repair morph wins back "
+                f"{sum(gains) / len(gains):+.3f} deliv frac (mean)")
+    return rows, derived
+
+
+def watchdog_demo(n_pes: int = 16, watchdog: int = 64):
+    """(rows, derived) for the BENCH ``fault_trace_watchdog`` table."""
+    spec = _spec("ring_mesh", n_pes)
+    topo = spec.build()
+    # Phase 0 stays inside ringlet 0 and completes; phase 1 must cross
+    # blocks through ringlet 0's router — killed, so it can never retire.
+    trace = tr.from_records(n_pes, [[(0, 1, 4), (2, 3, 4)],
+                                    [(0, n_pes // 2, 4)]])
+    faults = FaultSpec(dead_routers=(0,))
+    rows = []
+    for mode, strict, wd in (("strict+watchdog", True, watchdog),
+                             ("lenient", False, 0)):
+        rep = Experiment(
+            topology=spec, traffic=trace,
+            budget=Budget(cycles=800, warmup=0, strict_barrier=strict,
+                          watchdog=wd),
+            inj_rate=1.0, faults=faults).run()
+        r = rep.sim
+        rows.append({
+            "mode": mode, "n_pes": n_pes,
+            "completed": r.trace_completed,
+            "stalled_phase": r.stalled_phase,
+            "stall_cycle": r.stall_cycle if r.stalled_phase >= 0 else -1,
+            "stall_unretired": r.stall_unretired,
+            "phase_done": list(r.phase_done),
+            "delivered": r.delivered, "dropped": r.dropped,
+        })
+    strict_row, lenient_row = rows
+    assert not strict_row["completed"] and strict_row["stalled_phase"] == 1, \
+        f"watchdog did not fire on the severed phase: {strict_row}"
+    assert lenient_row["completed"], \
+        f"lenient barriers should retire drops and complete: {lenient_row}"
+    derived = (f"strict: phase {strict_row['stalled_phase']} stalled at "
+               f"cycle {strict_row['stall_cycle']} with "
+               f"{strict_row['stall_unretired']} unretired credits; "
+               f"lenient completes with {lenient_row['dropped']} drops")
+    return rows, derived

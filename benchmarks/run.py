@@ -24,7 +24,7 @@ import time
 
 import jax
 
-from benchmarks import kernel_micro, noc_tables, serial_baseline
+from benchmarks import fault_sweep, kernel_micro, noc_tables, serial_baseline
 from benchmarks import trace_replay as trace_replay_mod
 from repro.core import sweep
 
@@ -43,7 +43,18 @@ def _setup_persistent_cache() -> dict | None:
     d = os.environ.get("REPRO_COMPILE_CACHE")
     if not d:
         return None
-    os.makedirs(d, exist_ok=True)
+    # A bad cache dir (unwritable parent, path collides with a file, ...)
+    # must degrade to an uncached run, not kill the benchmark.
+    try:
+        os.makedirs(d, exist_ok=True)
+        probe = os.path.join(d, ".write_probe")
+        with open(probe, "w"):
+            pass
+        os.remove(probe)
+    except OSError as e:
+        print(f"# REPRO_COMPILE_CACHE unusable ({e}); "
+              "continuing without persistent cache", file=sys.stderr)
+        return None
     jax.config.update("jax_compilation_cache_dir", d)
     # Benchmark programs compile fast; cache everything regardless of
     # compile time or artifact size so the hit counters are meaningful.
@@ -140,6 +151,9 @@ def main() -> None:
          {}, False),
         ("trace_replay", trace_replay_mod.trace_replay,
          {"quick": args.quick}, True),
+        ("fault_tolerance", fault_sweep.fault_tolerance,
+         {"quick": args.quick}, False),
+        ("fault_trace_watchdog", fault_sweep.watchdog_demo, {}, False),
         ("paper_validation_c1_c8", noc_tables.paper_validation, {}, False),
     ]
 
@@ -200,9 +214,26 @@ def main() -> None:
     # Quick / partial runs must not clobber the committed full-run record.
     out = "BENCH_noc.json" if not (args.quick or args.only) \
         else "BENCH_noc_quick.json"
+    _write_results(out)
+    print(f"# wrote {out}")
+
+
+def _write_results(out: str) -> None:
+    """Write RESULTS to ``out``.  A truncated/corrupt prior record (a
+    killed run, a bad merge) is moved aside to ``<out>.corrupt`` — with a
+    warning, so the loss is visible — rather than crashing or being
+    silently destroyed; a valid prior record is simply replaced."""
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                json.load(f)
+        except (OSError, UnicodeDecodeError, json.JSONDecodeError) as e:
+            backup = out + ".corrupt"
+            os.replace(out, backup)
+            print(f"# prior {out} was corrupt ({e}); moved to {backup}",
+                  file=sys.stderr)
     with open(out, "w") as f:
         json.dump(RESULTS, f, indent=1, default=str)
-    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

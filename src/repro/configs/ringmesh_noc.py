@@ -54,6 +54,41 @@ class NoCExperimentConfig:
             for t in traffics
         ]
 
+    def resilience_experiments(self, n_pes: int = 64,
+                               families=("ring_mesh", "flat_mesh"),
+                               dead_link_counts=(2, 4, 8),
+                               fault_seeds=(0, 1), inj_rate: float = 0.1,
+                               cycles: int = 800,
+                               repair: bool = True) -> list[Experiment]:
+        """Resilience grid (DESIGN.md §13): each family's healthy point,
+        a dead-link-count x placement-seed grid injected unrepaired
+        (runtime drop masks — the whole grid batches), and, when
+        ``repair`` is set, a repaired twin of the first scenario at each
+        count (route tables rebuilt around the dead links).  Injection
+        sits below ring-mesh saturation so delivered fraction tracks
+        fault severity, not congestion."""
+        from repro.faults import sample_faults, suggest_repair_morph
+
+        budget = Budget(cycles=cycles, warmup=0)
+        exps = []
+        for f in families:
+            spec = self.topology_spec(f, n_pes)
+            topo = spec.build()
+            exps.append(Experiment(topology=spec, budget=budget,
+                                   inj_rate=inj_rate))
+            for c in dead_link_counts:
+                for s in fault_seeds:
+                    flt = sample_faults(topo, n_dead_links=c, seed=s)
+                    exps.append(Experiment(topology=spec, budget=budget,
+                                           inj_rate=inj_rate, faults=flt))
+                if repair:
+                    flt = sample_faults(topo, n_dead_links=c,
+                                        seed=fault_seeds[0])
+                    exps.append(Experiment(
+                        topology=suggest_repair_morph(spec, flt),
+                        budget=budget, inj_rate=inj_rate))
+        return exps
+
     def trace_experiments(self, n_pes: int = 64,
                           families=("ring_mesh", "flat_mesh"),
                           cycles: int = 4000, pod_size: int = 16,

@@ -31,18 +31,27 @@ from typing import Iterable, Optional, Sequence, Union
 
 from repro.core import analytic, area, power, sim, sweep, traffic
 from repro.core.spec import TopologySpec
+from repro.faults.spec import FaultSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class Budget:
     """Simulation budget: how long to run and measure one point, and which
     simulator backend executes it (``"xla"`` scan oracle / ``"pallas"``
-    fused kernel — bit-identical, see DESIGN.md §11)."""
+    fused kernel — bit-identical, see DESIGN.md §11).  ``strict_barrier``
+    and ``watchdog`` are trace-replay semantics (DESIGN.md §13): strict
+    barriers retire only *delivered* flits (drops leave credits
+    unretired), and a non-zero watchdog aborts a replay after that many
+    consecutive cycles of zero progress in a phase, recording the stalled
+    phase and its unretired credit instead of spinning to budget
+    exhaustion."""
 
     cycles: int = 1200
     warmup: int = 400
     starvation_limit: int = 8
     backend: str = "xla"
+    strict_barrier: bool = False
+    watchdog: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -87,6 +96,10 @@ class Experiment:
     budget: Budget = Budget()
     inj_rate: float = 0.25
     seed: int = 0
+    # Faults injected *unrepaired* at runtime (drop masks on the healthy
+    # geometry — vmappable, DESIGN.md §13).  Faults *repaired into* the
+    # fabric belong on the TopologySpec instead.
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self):
         if not isinstance(self.topology, TopologySpec):
@@ -94,6 +107,15 @@ class Experiment:
         object.__setattr__(self, "traffic", traffic.resolve(self.traffic))
         if not isinstance(self.budget, Budget):
             raise TypeError("budget must be a Budget")
+        if self.faults is not None:
+            flt = (self.faults if isinstance(self.faults, FaultSpec)
+                   else FaultSpec.from_dict(self.faults))
+            object.__setattr__(self, "faults", flt or None)
+        if self.faults is not None:
+            # Fail here, at construction, with the offending id named —
+            # not as an opaque gather error inside a batched dispatch.
+            self.faults.validate_against(self.topology.build())
+        self.sim_config()  # surface budget/traffic conflicts eagerly too
 
     # -- execution ----------------------------------------------------------
     def sim_config(self) -> sim.SimConfig:
@@ -101,7 +123,9 @@ class Experiment:
             cycles=self.budget.cycles, warmup=self.budget.warmup,
             inj_rate=self.inj_rate, pattern=self.traffic, seed=self.seed,
             starvation_limit=self.budget.starvation_limit,
-            backend=self.budget.backend)
+            backend=self.budget.backend, faults=self.faults,
+            strict_barrier=self.budget.strict_barrier,
+            watchdog=self.budget.watchdog)
 
     def run(self) -> "Report":
         """Run this one point (per-point jit path; bit-identical to the
@@ -111,26 +135,34 @@ class Experiment:
 
     def run_grid(self, inj_rates: Optional[Iterable[float]] = None,
                  traffics: Optional[Iterable] = None,
-                 seeds: Optional[Iterable[int]] = None) -> list["Report"]:
+                 seeds: Optional[Iterable[int]] = None,
+                 faults: Optional[Iterable] = None) -> list["Report"]:
         """Cross-product grid around this experiment (rate-major, then
-        traffic, then seed — the ``sweep.grid`` order), executed as
-        batched device dispatches on the sweep engine.  Omitted axes
-        default to this experiment's own value."""
+        traffic, then seed, then fault scenario — the ``sweep.grid``
+        order), executed as batched device dispatches on the sweep
+        engine.  Omitted axes default to this experiment's own value;
+        ``faults`` takes ``FaultSpec | None`` entries (a resilience grid
+        still batches — fault drop masks are per-point data)."""
         # Materialize each axis once: a one-shot iterator re-iterated by
         # the inner comprehension loops would silently truncate the grid.
         irs = tuple(inj_rates) if inj_rates is not None else (self.inj_rate,)
         trs = tuple(traffics) if traffics is not None else (self.traffic,)
         sds = tuple(seeds) if seeds is not None else (self.seed,)
-        exps = [dataclasses.replace(self, inj_rate=ir, traffic=tr, seed=s)
-                for ir in irs for tr in trs for s in sds]
+        fls = tuple(faults) if faults is not None else (self.faults,)
+        exps = [dataclasses.replace(self, inj_rate=ir, traffic=tr, seed=s,
+                                    faults=f)
+                for ir in irs for tr in trs for s in sds for f in fls]
         return run_experiments(exps)
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
-        return {"topology": self.topology.to_dict(),
-                "traffic": self.traffic.to_dict(),
-                "budget": self.budget.to_dict(),
-                "inj_rate": self.inj_rate, "seed": self.seed}
+        d = {"topology": self.topology.to_dict(),
+             "traffic": self.traffic.to_dict(),
+             "budget": self.budget.to_dict(),
+             "inj_rate": self.inj_rate, "seed": self.seed}
+        if self.faults is not None:
+            d["faults"] = self.faults.to_dict()
+        return d
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict())
@@ -140,7 +172,9 @@ class Experiment:
         return cls(topology=TopologySpec.from_dict(d["topology"]),
                    traffic=traffic.TrafficSpec.from_dict(d["traffic"]),
                    budget=Budget.from_dict(d["budget"]),
-                   inj_rate=d["inj_rate"], seed=d["seed"])
+                   inj_rate=d["inj_rate"], seed=d["seed"],
+                   faults=(FaultSpec.from_dict(d["faults"])
+                           if "faults" in d else None))
 
     @classmethod
     def from_json(cls, s: str) -> "Experiment":
@@ -187,6 +221,25 @@ class Report:
                 "lut": self.area.lut,
                 "diameter": self.analytic.diameter,
                 "bisection_links": self.analytic.bisection_links}
+
+    # -- resilience views (DESIGN.md §13) ----------------------------------
+    @property
+    def reachability(self) -> float:
+        """Fraction of (src, dst) PE pairs with a live route (1.0 on a
+        healthy fabric; < 1.0 when faults partition it)."""
+        return self.sim.reachability
+
+    @property
+    def delivered_fraction(self) -> float:
+        """delivered / offered over the measured window."""
+        return self.sim.delivered_fraction
+
+    def latency_inflation(self, healthy: "Report") -> float:
+        """Average-latency ratio of this (faulted / repaired) run against
+        a healthy baseline report of the same scenario; NaN when the
+        baseline delivered nothing."""
+        base = healthy.sim.avg_latency
+        return (self.sim.avg_latency / base) if base > 0 else float("nan")
 
     # -- trace replay views (DESIGN.md §12) --------------------------------
     @property
@@ -238,18 +291,27 @@ def _report(exp: Experiment, r: sim.SimResult) -> Report:
 def _sim_config_to_dict(cfg: sim.SimConfig) -> dict:
     pattern = (cfg.pattern if isinstance(cfg.pattern, str)
                else cfg.pattern.to_dict())
-    return {"cycles": cfg.cycles, "warmup": cfg.warmup,
-            "inj_rate": cfg.inj_rate, "pattern": pattern,
-            "locality_ringlet": cfg.locality_ringlet,
-            "locality_block": cfg.locality_block, "seed": cfg.seed,
-            "starvation_limit": cfg.starvation_limit,
-            "backend": cfg.backend}
+    d = {"cycles": cfg.cycles, "warmup": cfg.warmup,
+         "inj_rate": cfg.inj_rate, "pattern": pattern,
+         "locality_ringlet": cfg.locality_ringlet,
+         "locality_block": cfg.locality_block, "seed": cfg.seed,
+         "starvation_limit": cfg.starvation_limit,
+         "backend": cfg.backend}
+    if cfg.faults is not None:
+        d["faults"] = cfg.faults.to_dict()
+    if cfg.strict_barrier:
+        d["strict_barrier"] = True
+    if cfg.watchdog:
+        d["watchdog"] = cfg.watchdog
+    return d
 
 
 def _sim_config_from_dict(d: dict) -> sim.SimConfig:
     d = dict(d)
     if not isinstance(d["pattern"], str):
         d["pattern"] = traffic.TrafficSpec.from_dict(d["pattern"])
+    if "faults" in d:
+        d["faults"] = FaultSpec.from_dict(d["faults"])
     return sim.SimConfig(**d)
 
 

@@ -106,6 +106,13 @@ class MorphController:
     # -- morph application ----------------------------------------------------
     def apply(self, morph: pk.MorphPacket, target: int) -> None:
         """Apply ``morph`` to router ``target`` (hl=1) or RS ``target`` (hl=0)."""
+        t = self.topo
+        n_routers = t.blocks_x * t.blocks_y if morph.hl else t.n_pes
+        if not 0 <= target < n_routers:
+            what = "router" if morph.hl else "ring switch"
+            raise ValueError(
+                f"morph targets {what} {target}, but {t.name} has only "
+                f"{n_routers} {what}es (0..{n_routers - 1})")
         groups = (self.router_links(target) if morph.hl
                   else self.ringswitch_links(target))
         for g, state in enumerate(morph.link_states):

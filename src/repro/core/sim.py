@@ -53,6 +53,7 @@ import numpy as np
 from repro.core import packet as pk
 from repro.core import topology as topo_mod
 from repro.core import traffic
+from repro.faults.spec import FaultSpec
 from repro.kernels import noc_step
 
 BACKENDS = ("xla", "pallas")
@@ -88,6 +89,18 @@ class SimConfig:
     seed: int = 0
     starvation_limit: int = 8
     backend: str = "xla"  # "xla" (lax.scan oracle) | "pallas" (fused kernel)
+    # Fault injection (repro.faults): faults are lowered to a per-link
+    # drop mask inside the shared cycle step — routing is untouched, so
+    # whole resilience grids vmap on the healthy geometry.
+    faults: Optional[FaultSpec] = None
+    # Trace replay semantics under faults: with strict_barrier a phase
+    # barrier retires *delivered* flits only (dropped flits leave the
+    # barrier waiting forever on a dead link); the watchdog then detects
+    # a phase making no progress for `watchdog` consecutive cycles and
+    # terminates with a per-phase diagnostic instead of spinning to
+    # budget exhaustion.  0 disables the watchdog (compiled away).
+    strict_barrier: bool = False
+    watchdog: int = 0
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -107,6 +120,19 @@ class SimConfig:
             raise ValueError(
                 "trace replay needs warmup=0: per-phase completion cycles "
                 "count from cycle 0 and every injected flit is workload")
+        if self.faults is not None and not isinstance(self.faults,
+                                                      FaultSpec):
+            raise TypeError(
+                f"faults must be a repro.faults.FaultSpec, got "
+                f"{type(self.faults).__name__}")
+        if self.watchdog < 0:
+            raise ValueError(
+                f"watchdog must be >= 0 cycles, got {self.watchdog}")
+        if (self.strict_barrier or self.watchdog) and not spec.is_trace:
+            raise ValueError(
+                "strict_barrier/watchdog are trace-replay semantics "
+                "(phase barriers); statistical traffic has no barrier "
+                "to watch")
         if not 0 <= self.locality_ringlet + self.locality_block <= 1:
             raise ValueError("locality fractions must sum to <= 1")
         if isinstance(self.pattern, traffic.TrafficSpec) and (
@@ -141,9 +167,15 @@ class SimResult:
     flit_hops_per_cycle: float  # link traversals / cycle (activity factor)
     per_pe_throughput: float
     # Trace replay only (DESIGN.md §12): the cycle each phase's last flit
-    # retired, -1 for phases the cycle budget did not complete.  Empty for
-    # statistical traffic.
+    # retired, -1 for phases the cycle budget did not complete, and
+    # ``-2 - cycle`` for a phase the stall watchdog terminated at
+    # ``cycle`` (DESIGN.md §13).  Empty for statistical traffic.
     phase_done: tuple = ()
+    # Graceful degradation (repro.faults): fraction of (src, dst) pairs
+    # with a live route (1.0 for healthy fabrics), and — when the stall
+    # watchdog fired — the credits the stalled phase never retired.
+    reachability: float = 1.0
+    stall_unretired: int = 0
 
     @property
     def n_phases(self) -> int:
@@ -153,6 +185,26 @@ class SimResult:
     def trace_completed(self) -> bool:
         """True when every phase of a trace replay finished in budget."""
         return bool(self.phase_done) and self.phase_done[-1] >= 0
+
+    @property
+    def delivered_fraction(self) -> float:
+        """Delivered / offered — the resilience headline (1.0 healthy)."""
+        return self.delivered / max(self.offered, 1)
+
+    @property
+    def stalled_phase(self) -> int:
+        """Index of the trace phase the stall watchdog terminated, or -1
+        (phases encode the stall as ``phase_done = -2 - cycle``)."""
+        for i, d in enumerate(self.phase_done):
+            if d <= -2:
+                return i
+        return -1
+
+    @property
+    def stall_cycle(self) -> int:
+        """Cycle at which the watchdog fired, or -1 if it never did."""
+        i = self.stalled_phase
+        return -2 - self.phase_done[i] if i >= 0 else -1
 
     @property
     def completion_cycles(self) -> int:
@@ -189,6 +241,14 @@ class SimResult:
             r["n_phases"] = self.n_phases
             r["completion_cycles"] = self.completion_cycles
             r["phase_latencies"] = list(self.phase_latencies())
+            if self.stalled_phase >= 0:
+                r["stalled_phase"] = self.stalled_phase
+                r["stall_cycle"] = self.stall_cycle
+                r["stall_unretired"] = self.stall_unretired
+        if self.reachability != 1.0 or (self.cfg is not None
+                                        and self.cfg.faults):
+            r["reachability"] = round(self.reachability, 4)
+            r["delivered_fraction"] = round(self.delivered_fraction, 4)
         return r
 
 
@@ -221,12 +281,22 @@ class SweepPoint:
     # grids of different traces on one topology share one executable.
     ph_dst: jax.Array
     ph_flits: jax.Array
+    # Fault injection (repro.faults): lowered per-queue drop-mask entries
+    # (queue id, drop probability, onset cycle).  Healthy points carry the
+    # empty [0] shape; faulted points are padded to a small static bucket,
+    # so the fault *shape* joins the compile key while fault identity
+    # (which links, what rates, what seeds) stays traced data — whole
+    # resilience grids vmap through one executable.
+    fault_links: jax.Array   # [F] int32 queue ids (pad -> n_links)
+    fault_drop_p: jax.Array  # [F] f32 (pad -> 0.0)
+    fault_onset: jax.Array   # [F] int32
 
 
 jax.tree_util.register_dataclass(
     SweepPoint,
     data_fields=["inj_rate", "loc_ring", "loc_block", "seed", "use_perm",
-                 "perm_dst", "ph_dst", "ph_flits"],
+                 "perm_dst", "ph_dst", "ph_flits", "fault_links",
+                 "fault_drop_p", "fault_onset"],
     meta_fields=[])
 
 
@@ -245,19 +315,24 @@ class Metrics:
     stall_next_kind: jax.Array    # [8]
     q_len_by_kind: jax.Array      # [8]
     phase_done: jax.Array         # [n_phases] int32 ([0] when statistical)
+    stall_unretired: jax.Array    # credits unretired at watchdog fire
 
 
 jax.tree_util.register_dataclass(
     Metrics,
     data_fields=["delivered", "offered", "accepted", "dropped", "lost",
                  "lat_sum", "moved", "in_flight", "wins_by_kind",
-                 "stall_next_kind", "q_len_by_kind", "phase_done"],
+                 "stall_next_kind", "q_len_by_kind", "phase_done",
+                 "stall_unretired"],
     meta_fields=[])
 
 
-def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
+def make_point(cfg: SimConfig, n_pes: int,
+               topo: Optional[topo_mod.Topology] = None) -> SweepPoint:
     """Host-side SweepPoint for one SimConfig (pattern strings and
-    TrafficSpec instances both resolve through the traffic registry)."""
+    TrafficSpec instances both resolve through the traffic registry).
+    ``topo`` is required only when ``cfg.faults`` is set — fault ids
+    lower to queue-level drop entries against the concrete topology."""
     spec = traffic.resolve(cfg.pattern)
     perm = spec.destinations(n_pes)
     use_perm = perm is not None
@@ -282,6 +357,17 @@ def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
     else:
         ph_dst = np.zeros((0, n_pes), np.int32)
         ph_flits = np.zeros((0, n_pes), np.int32)
+    if cfg.faults:
+        if topo is None:
+            raise ValueError(
+                "SimConfig.faults lowers against the concrete topology; "
+                "call make_point(cfg, n_pes, topo)")
+        cfg.faults.validate_against(topo)
+        f_links, f_drop_p, f_onset = cfg.faults.lower(topo)
+    else:
+        f_links = np.zeros((0,), np.int32)
+        f_drop_p = np.zeros((0,), np.float32)
+        f_onset = np.zeros((0,), np.int32)
     return SweepPoint(
         inj_rate=np.float32(cfg.inj_rate),
         loc_ring=np.float32(loc_ring),
@@ -291,6 +377,9 @@ def make_point(cfg: SimConfig, n_pes: int) -> SweepPoint:
         perm_dst=np.asarray(perm, np.int32),
         ph_dst=ph_dst,
         ph_flits=ph_flits,
+        fault_links=f_links,
+        fault_drop_p=f_drop_p,
+        fault_onset=f_onset,
     )
 
 
@@ -351,9 +440,13 @@ def _structural_cache(topo: topo_mod.Topology) -> dict:
         "route table contains a non-node-local hop"
 
     n_nodes = int(max(src.max(), dst.max())) + 1
+    dead = (topo.dead_queues if topo.dead_queues is not None
+            else np.zeros(L, bool))
     buckets: list[list[int]] = [[] for _ in range(n_nodes)]
     for q in range(L):
-        if dst[q] >= 0:
+        # Dead queues (faulted fabrics) leave the candidate tables: they
+        # can never hold a flit, so they must never win arbitration.
+        if dst[q] >= 0 and not dead[q]:
             buckets[dst[q]].append(q)
     fi = max((len(b) for b in buckets), default=1) or 1
 
@@ -416,7 +509,8 @@ def build_geometry(topo: topo_mod.Topology) -> Geometry:
 # ---------------------------------------------------------------------------
 def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
               starvation_limit: int, arb_iters: int = ARB_ITERS,
-              diagnostics: bool = False, backend: str = "xla") -> Metrics:
+              diagnostics: bool = False, backend: str = "xla",
+              strict_barrier: bool = False, watchdog: int = 0) -> Metrics:
     L, P = geom.n_links, geom.n_pes
     kinds8 = jnp.arange(8, dtype=jnp.int32)[:, None]  # [8, 1]
     kind_oh = geom.kind[None, :] == kinds8           # [8, L+1] static mask
@@ -430,8 +524,19 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
     blk_base = pes - pes % pk.PES_PER_BLOCK
     pos_blk = pes % pk.PES_PER_BLOCK
 
+    # Fault entries ride the point as traced data; their [F] shape is the
+    # static "fault shape".  Healthy points keep the historical 5-way key
+    # split, so healthy random streams are bit-identical with or without
+    # the fault machinery compiled in.
+    n_faults = int(point.fault_links.shape[0])
     key = jax.random.PRNGKey(point.seed)
-    k_inj, k_dst, k_loc, k_ring, k_blk = jax.random.split(key, 5)
+    if n_faults:
+        k_inj, k_dst, k_loc, k_ring, k_blk, k_flt = jax.random.split(key, 6)
+        fu_s = jax.random.uniform(k_flt, (cycles, n_faults))
+        faults = (point.fault_links, point.fault_drop_p, point.fault_onset)
+    else:
+        k_inj, k_dst, k_loc, k_ring, k_blk = jax.random.split(key, 5)
+        fu_s, faults = None, None
     inj_s = jax.random.bernoulli(k_inj, point.inj_rate, (cycles, P))
     off_s = jax.random.randint(k_dst, (cycles, P), 1, P, dtype=jnp.int32)
     u_s = jax.random.uniform(k_loc, (cycles, P))
@@ -476,20 +581,26 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
         out = noc_step.run_fused(
             geom, inj_s, dst_s, cycles=cycles, warmup=warmup,
             starvation_limit=starvation_limit, arb_iters=arb_iters,
-            trace=trace, diagnostics=diagnostics)
+            trace=trace, faults=faults, fault_u=fu_s,
+            strict_barrier=strict_barrier, watchdog=watchdog,
+            diagnostics=diagnostics)
         ql, m_scal, m_kind = out[:3]
         ph_done = out[3] if n_phases else jnp.zeros((0,), jnp.int32)
     elif backend == "xla":
         def step(carry, xs):
-            cycle, inj, dst = xs
+            cycle, inj, dst = xs[:3]
+            fu = xs[3] if n_faults else None
             return noc_step.cycle_step(
-                geom, carry, cycle, inj, dst, warmup=warmup,
+                geom, carry, cycle, inj, dst, fault_u=fu, warmup=warmup,
                 starvation_limit=starvation_limit, arb_iters=arb_iters,
-                trace=trace, diagnostics=diagnostics), None
+                trace=trace, faults=faults, strict_barrier=strict_barrier,
+                watchdog=watchdog, diagnostics=diagnostics), None
 
         carry0 = noc_step.initial_state(L, geom.depth, n_pes=P,
                                         n_phases=n_phases)
         xs = (jnp.arange(cycles, dtype=jnp.int32), inj_s, dst_s)
+        if n_faults:
+            xs = xs + (fu_s,)
         final, _ = jax.lax.scan(step, carry0, xs)
         ql, m_scal, m_kind = final[1], final[3], final[4]
         ph_done = final[8] if n_phases else jnp.zeros((0,), jnp.int32)
@@ -509,13 +620,15 @@ def _run_core(geom: Geometry, point: SweepPoint, *, cycles: int, warmup: int,
         stall_next_kind=m_kind[noc_step.KIND_STALLS],
         q_len_by_kind=jnp.sum(jnp.where(kind_oh, ql[None, :], 0), axis=1,
                               dtype=jnp.int32),
-        phase_done=ph_done)
+        phase_done=ph_done,
+        stall_unretired=m_scal[noc_step.STALL_CREDIT])
 
 
 _run_single = jax.jit(
     _run_core,
     static_argnames=("cycles", "warmup", "starvation_limit", "arb_iters",
-                     "diagnostics", "backend"))
+                     "diagnostics", "backend", "strict_barrier",
+                     "watchdog"))
 
 
 def compile_cache_size() -> int:
@@ -529,6 +642,28 @@ def clear_compile_cache() -> None:
     """Drop the compiled single-point executables (tests use this to reset
     compile counters between cases; the next ``simulate`` recompiles)."""
     _run_single.clear_cache()
+
+
+# Host-side reachability cache: FaultSpec is frozen/hashable and the
+# route walk is pure, so one walk serves every point sharing (topology,
+# fault set) in a sweep grid.
+_REACH_CACHE: dict = {}
+
+
+def _fault_reachability(topo: topo_mod.Topology,
+                        faults: Optional[FaultSpec]) -> float:
+    if not faults:
+        return topo.reachable_frac  # 1.0 healthy; baked value if repaired
+    key = (id(topo), topo.name, faults)
+    hit = _REACH_CACHE.get(key)
+    if hit is None:
+        dead = faults.dead_queue_mask(topo)
+        hit = (topo.reachable_frac if not dead.any()
+               else topo_mod.reachable_fraction(topo, dead))
+        if len(_REACH_CACHE) > 512:
+            _REACH_CACHE.clear()
+        _REACH_CACHE[key] = hit
+    return hit
 
 
 def _to_result(topo: topo_mod.Topology, cfg: SimConfig,
@@ -551,16 +686,20 @@ def _to_result(topo: topo_mod.Topology, cfg: SimConfig,
         flit_hops_per_cycle=int(m.moved) / mc,
         per_pe_throughput=delivered / mc / topo.n_pes,
         phase_done=tuple(int(d) for d in np.asarray(m.phase_done)),
+        reachability=_fault_reachability(topo, cfg.faults),
+        stall_unretired=int(m.stall_unretired),
     )
 
 
 def simulate(topo: topo_mod.Topology, cfg: SimConfig) -> SimResult:
     """Run one simulation; returns steady-state metrics."""
     geom = build_geometry(topo)
-    point = make_point(cfg, topo.n_pes)
+    point = make_point(cfg, topo.n_pes, topo)
     metrics = _run_single(geom, point, cycles=cfg.cycles, warmup=cfg.warmup,
                           starvation_limit=cfg.starvation_limit,
-                          backend=cfg.backend)
+                          backend=cfg.backend,
+                          strict_barrier=cfg.strict_barrier,
+                          watchdog=cfg.watchdog)
     metrics = jax.tree.map(np.asarray, metrics)
     return _to_result(topo, cfg, metrics)
 
@@ -571,10 +710,12 @@ def kind_diagnostics(topo: topo_mod.Topology, cfg: SimConfig) -> dict:
     ``diagnostics=True`` — the benchmark/sweep hot path skips these
     counters entirely."""
     geom = build_geometry(topo)
-    point = make_point(cfg, topo.n_pes)
+    point = make_point(cfg, topo.n_pes, topo)
     m = _run_single(geom, point, cycles=cfg.cycles, warmup=cfg.warmup,
                     starvation_limit=cfg.starvation_limit, diagnostics=True,
-                    backend=cfg.backend)
+                    backend=cfg.backend,
+                    strict_barrier=cfg.strict_barrier,
+                    watchdog=cfg.watchdog)
     names = topo_mod.KIND_NAMES
     return {
         field: {names[k]: int(np.asarray(getattr(m, field))[k])

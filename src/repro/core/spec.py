@@ -23,6 +23,7 @@ import json
 from repro.core import morph as morph_mod
 from repro.core import packet as pk
 from repro.core import topology as topo_mod
+from repro.faults.spec import FaultSpec
 
 FAMILIES = ("ring_mesh", "flat_mesh")
 _ALIASES = {"ring_mesh": "ring_mesh", "ringmesh": "ring_mesh",
@@ -76,6 +77,12 @@ class TopologySpec:
     queue_depth: int = 2
     src_queue_depth: int = 4
     morphs: tuple[MorphOverlay, ...] = ()
+    # Faults *repaired into* the fabric (repro.faults, DESIGN.md §13):
+    # build rebuilds route tables around the dead components, masks dead
+    # queues out of arbitration, and records the reachability matrix.
+    # (Faults passed to SimConfig/Experiment instead are injected
+    # unrepaired, as runtime drop masks on the healthy geometry.)
+    faults: FaultSpec | None = None
 
     def __post_init__(self):
         fam = _ALIASES.get(self.family)
@@ -95,6 +102,23 @@ class TopologySpec:
         if morphs and fam != "ring_mesh":
             raise ValueError("morph overlays only apply to ring_mesh")
         object.__setattr__(self, "morphs", morphs)
+        # Morph targets are range-checked here, at construction time, so a
+        # bad overlay fails with a clear error instead of surfacing as a
+        # silent no-op or an opaque gather error deep inside run().
+        bx, by = grids[self.n_pes]
+        n_routers = bx * by if fam == "ring_mesh" else self.n_pes
+        for m in morphs:
+            bound = n_routers if m.hl == 1 else self.n_pes
+            what = "router" if m.hl == 1 else "ring switch"
+            if m.target >= bound:
+                raise ValueError(
+                    f"morph overlay targets {what} {m.target}, but "
+                    f"{fam}_{self.n_pes} has only {bound} {what}es "
+                    f"(0..{bound - 1})")
+        if self.faults is not None:
+            flt = (self.faults if isinstance(self.faults, FaultSpec)
+                   else FaultSpec.from_dict(self.faults))
+            object.__setattr__(self, "faults", flt or None)
 
     @property
     def name(self) -> str:
@@ -102,7 +126,8 @@ class TopologySpec:
 
     # -- construction -------------------------------------------------------
     def build_fresh(self) -> topo_mod.Topology:
-        """A new Topology for this spec (morph overlays applied in order)."""
+        """A new Topology for this spec (morph overlays applied in order,
+        then faults repaired into the route tables)."""
         t = topo_mod.build(self.family, self.n_pes,
                            queue_depth=self.queue_depth,
                            src_queue_depth=self.src_queue_depth)
@@ -112,6 +137,14 @@ class TopologySpec:
                 ctl.apply(pk.MorphPacket(hl=m.hl, ers=0,
                                          link_states=m.link_states),
                           target=m.target)
+        if self.faults is not None:
+            self.faults.validate_against(t)
+            dead = self.faults.dead_queue_mask(t)
+            if dead.any():
+                route, reach = topo_mod.reroute_avoiding(t, dead)
+                t.route_table = route
+                t.dead_queues = dead
+                t.reachable = reach
         return t
 
     def build(self) -> topo_mod.Topology:
@@ -130,10 +163,13 @@ class TopologySpec:
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
-        return {"family": self.family, "n_pes": self.n_pes,
-                "queue_depth": self.queue_depth,
-                "src_queue_depth": self.src_queue_depth,
-                "morphs": [m.to_dict() for m in self.morphs]}
+        d = {"family": self.family, "n_pes": self.n_pes,
+             "queue_depth": self.queue_depth,
+             "src_queue_depth": self.src_queue_depth,
+             "morphs": [m.to_dict() for m in self.morphs]}
+        if self.faults is not None:
+            d["faults"] = self.faults.to_dict()
+        return d
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict())
@@ -143,6 +179,8 @@ class TopologySpec:
         # Only keys present in d are passed: absent depths fall back to the
         # dataclass defaults (the single source of truth).
         kw = {k: d[k] for k in ("queue_depth", "src_queue_depth") if k in d}
+        if "faults" in d:
+            kw["faults"] = FaultSpec.from_dict(d["faults"])
         return cls(family=d["family"], n_pes=d["n_pes"],
                    morphs=tuple(MorphOverlay.from_dict(m)
                                 for m in d.get("morphs", ())), **kw)

@@ -9,11 +9,13 @@ field (``core.sim``), so a whole grid ``jax.vmap``s through a single
 compiled program and returns all results from one device execution.
 
 Compile-cache key (DESIGN.md §4): array *shapes* only — (n_links, n_phys,
-n_pes, queue depth, fan-in widths) from the geometry, the batch size, and
-the static ints (cycles, warmup, starvation_limit).  Rates, seeds,
-localities and destination maps are data.  ``sweep()`` groups its configs
-by the static key internally, so mixed-budget batches still compile once
-per distinct budget, and results always come back in input order.
+n_pes, queue depth, fan-in widths) from the geometry, the batch size, the
+lowered fault-entry count (padded to buckets, DESIGN.md §13), and the
+static ints (cycles, warmup, starvation_limit, trace-barrier semantics).
+Rates, seeds, localities, destination maps and fault drop masks are data.
+``sweep()`` groups its configs by the static key internally, so
+mixed-budget batches still compile once per distinct budget, and results
+always come back in input order.
 
     topo = topology.build_ring_mesh(256)
     cfgs = sweep.grid(inj_rates=(0.25, 0.5, 1.0),
@@ -41,9 +43,11 @@ from repro.core import traffic
 
 @functools.partial(
     jax.jit, static_argnames=("cycles", "warmup", "starvation_limit",
-                              "backend", "arb_iters"))
+                              "backend", "arb_iters", "strict_barrier",
+                              "watchdog"))
 def _run_batch(geom: sim.Geometry, points: sim.SweepPoint, *, cycles: int,
                warmup: int, starvation_limit: int, backend: str = "xla",
+               strict_barrier: bool = False, watchdog: int = 0,
                arb_iters: int = sim.ARB_ITERS) -> sim.Metrics:
     """vmap of the simulator core over a stacked SweepPoint batch; the
     geometry is broadcast (in_axes=None) so it is uploaded once.  Both
@@ -51,7 +55,8 @@ def _run_batch(geom: sim.Geometry, points: sim.SweepPoint, *, cycles: int,
     against the broadcast geometry."""
     run = functools.partial(sim._run_core, cycles=cycles, warmup=warmup,
                             starvation_limit=starvation_limit,
-                            backend=backend, arb_iters=arb_iters)
+                            backend=backend, arb_iters=arb_iters,
+                            strict_barrier=strict_barrier, watchdog=watchdog)
     return jax.vmap(run, in_axes=(None, 0))(geom, points)
 
 
@@ -66,26 +71,31 @@ _XLA_COMPILES = 0
 
 
 def _static_key(geom: sim.Geometry, batch: int, trace_shape: tuple,
-                cycles: int, warmup: int, starv: int, backend: str,
+                fault_shape: tuple, cycles: int, warmup: int, starv: int,
+                backend: str, strict_barrier: bool, watchdog: int,
                 arb_iters: int) -> tuple:
     return (geom.n_links, geom.n_phys, geom.n_pes, geom.depth,
-            geom.cand.shape, geom.intab.shape, batch, trace_shape, cycles,
-            warmup, starv, backend, arb_iters)
+            geom.cand.shape, geom.intab.shape, batch, trace_shape,
+            fault_shape, cycles, warmup, starv, backend, strict_barrier,
+            watchdog, arb_iters)
 
 
 def _executable(geom: sim.Geometry, points: sim.SweepPoint, cycles: int,
                 warmup: int, starv: int, backend: str = "xla",
+                strict_barrier: bool = False, watchdog: int = 0,
                 arb_iters: int = sim.ARB_ITERS):
     global _XLA_COMPILES
     key = _static_key(geom, points.seed.shape[0],
-                      tuple(points.ph_dst.shape), cycles, warmup, starv,
-                      backend, arb_iters)
+                      tuple(points.ph_dst.shape),
+                      tuple(points.fault_links.shape), cycles, warmup, starv,
+                      backend, strict_barrier, watchdog, arb_iters)
     with _AOT_LOCK:
         exe = _AOT.get(key)
     if exe is None:
         exe = _run_batch.lower(
             geom, points, cycles=cycles, warmup=warmup,
             starvation_limit=starv, backend=backend,
+            strict_barrier=strict_barrier, watchdog=watchdog,
             arb_iters=arb_iters).compile()
         with _AOT_LOCK:
             if key in _AOT:          # lost a compile race: keep the winner
@@ -96,9 +106,16 @@ def _executable(geom: sim.Geometry, points: sim.SweepPoint, cycles: int,
     return exe
 
 
-def _stack_points(cfgs: Sequence[sim.SimConfig], n_pes: int) -> sim.SweepPoint:
-    pts = [sim.make_point(c, n_pes) for c in cfgs]
+def _stack_points(cfgs: Sequence[sim.SimConfig],
+                  topo: topo_mod.Topology) -> sim.SweepPoint:
+    pts = [sim.make_point(c, topo.n_pes, topo) for c in cfgs]
     return jax.tree.map(lambda *xs: np.stack(xs), *pts)
+
+
+# How many leading entries of a group key are _executable statics; the
+# remainder (trace phase count, lowered fault count) are array *shapes*
+# that only gate which points may stack together.
+_N_EXE_STATICS = 6
 
 
 def _grouped(topo: topo_mod.Topology, cfgs: Sequence[sim.SimConfig]):
@@ -106,14 +123,18 @@ def _grouped(topo: topo_mod.Topology, cfgs: Sequence[sim.SimConfig]):
     geom = sim.build_geometry(topo)
     groups: dict[tuple, list[int]] = {}
     for i, c in enumerate(cfgs):
-        # The trace phase count is an array *shape*, so points can only
-        # stack (and share an executable) with equal phase counts;
-        # statistical points all have n_trace_phases == 0.
+        # The trace phase count and the lowered fault count are array
+        # *shapes*, so points can only stack (and share an executable)
+        # with equal counts; statistical points all have
+        # n_trace_phases == 0, healthy points n_faults == 0, and fault
+        # lowering pads to bucket sizes so nearby fault counts coincide.
         n_phases = traffic.resolve(c.pattern).n_trace_phases
+        n_faults = c.faults.n_lowered(topo) if c.faults else 0
         groups.setdefault((c.cycles, c.warmup, c.starvation_limit,
-                           c.backend, n_phases), []).append(i)
-    return geom, [(key[:4], idxs, _stack_points([cfgs[i] for i in idxs],
-                                                topo.n_pes))
+                           c.backend, c.strict_barrier, c.watchdog,
+                           n_phases, n_faults), []).append(i)
+    return geom, [(key[:_N_EXE_STATICS], idxs,
+                   _stack_points([cfgs[i] for i in idxs], topo))
                   for key, idxs in groups.items()]
 
 
@@ -183,15 +204,21 @@ def grid(inj_rates: Iterable[float] = (0.25,),
          cycles: int = 1200, warmup: int = 400,
          locality_ringlet: float = 0.0, locality_block: float = 0.0,
          starvation_limit: int = 8,
-         backend: str = "xla") -> list[sim.SimConfig]:
-    """Cross-product config grid (rate-major, then pattern, then seed).
-    ``patterns`` accepts legacy strings and ``traffic.TrafficSpec``
-    instances alike; the locality kwargs describe the grid's regime and
-    are folded into specs that don't declare their own (declaring both
-    is an error).  ``backend`` selects the simulator hot path
-    (``"xla"`` scan oracle / ``"pallas"`` fused kernel) for every point."""
+         backend: str = "xla",
+         faults: Iterable = (None,)) -> list[sim.SimConfig]:
+    """Cross-product config grid (rate-major, then pattern, then seed,
+    then fault scenario).  ``patterns`` accepts legacy strings and
+    ``traffic.TrafficSpec`` instances alike; the locality kwargs describe
+    the grid's regime and are folded into specs that don't declare their
+    own (declaring both is an error).  ``backend`` selects the simulator
+    hot path (``"xla"`` scan oracle / ``"pallas"`` fused kernel) for every
+    point.  ``faults`` is an axis of ``FaultSpec | None`` scenarios
+    injected *unrepaired* (runtime drop masks on the healthy geometry, so
+    the whole resilience grid still batches — fault lowering pads to
+    shared bucket sizes and the lowered arrays are per-point data)."""
     patterns = tuple(patterns)  # seeds/patterns are re-iterated per rate:
     seeds = tuple(seeds)        # materialize so one-shot iterators work
+    faults = tuple(faults)
     cfgs = []
     for ir in inj_rates:
         for p in patterns:
@@ -210,8 +237,8 @@ def grid(inj_rates: Iterable[float] = (0.25,),
                               pattern=p, seed=s, locality_ringlet=lr,
                               locality_block=lb,
                               starvation_limit=starvation_limit,
-                              backend=backend)
-                for s in seeds)
+                              backend=backend, faults=f)
+                for s in seeds for f in faults)
     return cfgs
 
 

@@ -99,10 +99,38 @@ class Topology:
     pe_eject_link: np.ndarray  # int32 [n_pes]
     n_routers: int = 0
     n_ringlets: int = 0
+    # Fault bookkeeping (set by TopologySpec.build_fresh for faulted
+    # fabrics): dead VC queues masked out of arbitration, and the
+    # post-reroute reachability matrix.
+    dead_queues: np.ndarray | None = None   # bool [n_links] or None
+    reachable: np.ndarray | None = None     # bool [n_pes, n_pes] or None
 
     @property
     def is_sink(self) -> np.ndarray:
         return self.link_kind == EJECT
+
+    @property
+    def reachable_frac(self) -> float:
+        """Off-diagonal fraction of (src, dst) PE pairs with a live route
+        (1.0 for healthy fabrics)."""
+        if self.reachable is None:
+            return 1.0
+        p = self.n_pes
+        if p < 2:
+            return 1.0
+        off = int(self.reachable.sum()) - int(np.trace(self.reachable))
+        return off / (p * (p - 1))
+
+    def unreachable_pairs(self, limit: int = 64) -> list[tuple[int, int]]:
+        """Disconnected (src, dst) PE pairs of a faulted fabric, reported
+        instead of crashing (empty for healthy fabrics); truncated to
+        ``limit`` pairs."""
+        if self.reachable is None:
+            return []
+        bad = ~self.reachable
+        np.fill_diagonal(bad, False)
+        s, d = np.nonzero(bad)
+        return [(int(a), int(b)) for a, b in zip(s[:limit], d[:limit])]
 
     def hops(self, src: int, dst: int, max_hops: int = 10_000) -> int:
         """Network hops src->dst by walking the route table (excludes the
@@ -395,6 +423,137 @@ def build_flat_mesh(n_pes: int, queue_depth: int = 2,
         n_routers=n_pes,
         n_ringlets=0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fault-aware routing: route-walk classification, reachability, and
+# rebuilding route tables around dead components (repro.faults).
+# ---------------------------------------------------------------------------
+_FABRIC_KINDS = (RING, RS2R, R2RS, MESH)
+
+
+def _walk_classify(route: np.ndarray, is_sink: np.ndarray,
+                   dead: np.ndarray | None = None) -> np.ndarray:
+    """Bool [n_links, n_pes]: does a flit for dest ``d`` sitting in queue
+    ``q`` reach an eject sink by following ``route``, without crossing a
+    dead queue or an ``INVALID`` entry?
+
+    Computed by pointer doubling with two absorbing states (OK / BAD):
+    ``ceil(log2(n_links)) + 1`` table compositions classify every
+    (queue, dest) pair at once — no per-pair walking.
+    """
+    l_n, p = route.shape
+    a_ok, a_bad = l_n, l_n + 1
+    nxt = route
+    if dead is not None:
+        nxt = np.where(dead[:, None], INVALID, nxt)
+    tgt = np.clip(nxt, 0, l_n - 1)
+    tgt_dead = dead[tgt] if dead is not None else np.zeros_like(tgt, bool)
+    ptr = np.where(nxt < 0, a_bad,
+                   np.where(tgt_dead, a_bad,
+                            np.where(is_sink[tgt], a_ok, nxt))).astype(
+        np.int32)
+    ptr = np.vstack([ptr,
+                     np.full((1, p), a_ok, np.int32),
+                     np.full((1, p), a_bad, np.int32)])
+    for _ in range(int(np.ceil(np.log2(max(l_n, 2)))) + 1):
+        ptr = np.take_along_axis(ptr, ptr, axis=0)
+    return ptr[:l_n] == a_ok
+
+
+def reachable_pairs(topo: Topology,
+                    dead: np.ndarray | None = None) -> np.ndarray:
+    """Bool [n_pes, n_pes]: (src, dst) pairs with a live route under the
+    optional extra dead-queue mask (on top of any faults already baked
+    into ``topo.route_table``)."""
+    if topo.dead_queues is not None:
+        dead = (topo.dead_queues if dead is None
+                else dead | topo.dead_queues)
+    ok = _walk_classify(topo.route_table, topo.is_sink, dead)
+    return ok[topo.pe_src_link]
+
+
+def reachable_fraction(topo: Topology,
+                       dead: np.ndarray | None = None) -> float:
+    """Off-diagonal fraction of reachable (src, dst) pairs."""
+    p = topo.n_pes
+    if p < 2:
+        return 1.0
+    reach = reachable_pairs(topo, dead)
+    off = int(reach.sum()) - int(np.trace(reach))
+    return off / (p * (p - 1))
+
+
+def reroute_avoiding(topo: Topology, dead: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Rebuild ``topo.route_table`` around the dead queues.
+
+    Minimal perturbation: every (queue, dest) entry whose *entire*
+    downstream path is alive is kept verbatim (healthy traffic keeps the
+    paper's XY / shortest-direction routes bit-for-bit); only broken
+    entries are refilled, by steering each hop onto the out-queue whose
+    target node minimizes a node-level BFS distance-to-destination over
+    the surviving fabric channels.  Truly disconnected entries become
+    ``INVALID`` (such traffic is dropped at the point of no progress —
+    the paper's switched-off-channel semantics) rather than crashing.
+
+    Note the repair trades the dateline VC discipline for connectivity on
+    the detoured pairs — graceful degradation, not a proof-preserving
+    transform (DESIGN.md §13).
+
+    Returns ``(new_route, reachable)`` with ``reachable`` the bool
+    [n_pes, n_pes] pair matrix of the repaired fabric.
+    """
+    l_n, p = topo.n_links, topo.n_pes
+    route, kind = topo.route_table, topo.link_kind
+    src_n, dst_n = topo.link_src_node, topo.link_dst_node
+    is_sink = topo.is_sink
+
+    broken = ~_walk_classify(route, is_sink, dead)
+
+    # Node-level out-queue candidates over the surviving fabric channels
+    # (ascending queue id per node -> deterministic tie-breaks).
+    n_nodes = int(max(src_n.max(), dst_n.max())) + 1
+    live_q = np.nonzero(~dead & np.isin(kind, _FABRIC_KINDS))[0]
+    deg = np.bincount(src_n[live_q], minlength=n_nodes)
+    k_max = max(1, int(deg.max())) if live_q.size else 1
+    cand = np.full((n_nodes, k_max), -1, np.int64)
+    slot = np.zeros(n_nodes, np.int64)
+    for q in live_q:
+        u = src_n[q]
+        cand[u, slot[u]] = q
+        slot[u] += 1
+    # Target node of each candidate; pads point at a sentinel INF row.
+    cand_t = np.where(cand >= 0, dst_n[np.clip(cand, 0, l_n - 1)], n_nodes)
+
+    # Bellman-Ford to fixpoint: dist[node, dest_pe].  PE node ids equal PE
+    # indices in both families, so dist[d, d] = 0 seeds the recursion.
+    inf = np.int32(1 << 20)
+    dist = np.full((n_nodes + 1, p), inf, np.int32)
+    dist[np.arange(p), np.arange(p)] = 0
+    for _ in range(4 * n_nodes):
+        best = dist[cand_t].min(axis=1) + 1
+        new = np.minimum(dist[:n_nodes], best)
+        if np.array_equal(new, dist[:n_nodes]):
+            break
+        dist[:n_nodes] = new
+
+    # Best out-queue per (node, dest); unreachable -> INVALID; at the
+    # destination's own node -> its eject buffer.
+    sc = dist[cand_t]                      # [n_nodes, k_max, p]
+    k_star = sc.argmin(axis=1)             # first minimum: lowest queue id
+    best_q = cand[np.arange(n_nodes)[:, None], k_star]
+    best_d = np.take_along_axis(sc, k_star[:, None, :], axis=1)[:, 0, :]
+    node_route = np.where(best_d >= inf, INVALID, best_q).astype(np.int32)
+    node_route[np.arange(p), np.arange(p)] = topo.pe_eject_link
+
+    live_row = ~dead & (kind != EJECT)
+    filled = node_route[np.clip(dst_n, 0, n_nodes - 1)]
+    new_route = np.where(broken & live_row[:, None], filled, route)
+    new_route[dead] = INVALID
+
+    ok = _walk_classify(new_route, is_sink, dead)
+    return new_route, ok[topo.pe_src_link]
 
 
 def build(name: str, n_pes: int, **kw) -> Topology:

@@ -63,6 +63,28 @@ def test_backend_bit_identical_with_morph_overlay():
     assert rx.dropped > 0  # the overlay is actually in effect
 
 
+@pytest.mark.parametrize("family", ["ring_mesh", "flat_mesh"])
+def test_backend_bit_identical_under_faults(family):
+    """Faulted fabrics (DESIGN.md §13): the per-cycle fault drop mask is
+    part of the shared cycle_step, so runtime-injected dead links and
+    transient drops must stay bit-identical across backends — as must a
+    repaired build whose route tables were rebuilt around the faults."""
+    from repro.faults import sample_faults
+
+    spec = TopologySpec(family, 16)
+    f = sample_faults(spec.build(), n_dead_links=2, n_transient=2,
+                      drop_p=0.3, onset=CYCLES // 4, seed=6)
+    rx, _ = _assert_backends_identical(
+        spec.build(), dict(cycles=CYCLES, warmup=WARMUP, inj_rate=0.4,
+                           seed=5, faults=f))
+    assert rx.dropped > 0  # the faults are actually in effect
+    repaired = dataclasses.replace(
+        spec, faults=sample_faults(spec.build(), n_dead_links=3, seed=6))
+    _assert_backends_identical(
+        repaired.build(), dict(cycles=CYCLES, warmup=WARMUP, inj_rate=0.4,
+                               seed=5))
+
+
 def test_backend_validation():
     with pytest.raises(ValueError, match="backend"):
         sim.SimConfig(backend="cuda")
