@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: collect test test-dist dryrun-smoke bench-quick bench-kernels \
-        bench-traces bench-faults lint
+        bench-traces bench-faults lint analyze
 
 # Lint gate (pinned config: ruff.toml).  ruff is optional in the
 # container; skip cleanly when `python -m ruff` is absent rather than
@@ -14,17 +14,29 @@ lint:
 		echo "ruff not installed; skipping lint (config: ruff.toml)"; \
 	fi
 
-# Fast regression gate: lint, then every test module must import (a
-# missing module fails here in ~1s instead of minutes into the full
-# suite), and the benchmark harness must import so bench regressions
-# fail fast too.
-collect: lint
+# Static analysis gate (DESIGN.md §14): certify every config-grid fabric
+# plus sampled morph overlays and fault-repaired fabrics (deadlock
+# freedom, route liveness, table consistency — repro.analysis.fabric),
+# then lint src/ for JAX hot-path hazards (host syncs, tracer branches,
+# recompile-hazard statics — repro.analysis.lint_jax, audited exceptions
+# in src/repro/analysis/lint_allowlist.txt).  Sizes above 256 are left
+# to the analysis_certify benchmark so the gate stays seconds-fast.
+analyze:
+	$(PY) -m repro.analysis.fabric --max-pes 256
+	$(PY) -m repro.analysis.lint_jax src
+
+# Fast regression gate: lint + static analysis, then every test module
+# must import (a missing module fails here in ~1s instead of minutes
+# into the full suite), and the benchmark harness must import so bench
+# regressions fail fast too.
+collect: lint analyze
 	$(PY) -m pytest --collect-only -q
 	$(PY) -c "import benchmarks.run, benchmarks.noc_tables, \
 	          benchmarks.serial_baseline, benchmarks.kernel_micro, \
 	          benchmarks.trace_replay, benchmarks.fault_sweep, \
-	          repro.kernels.noc_step, repro.trace, repro.faults, \
-	          repro.faults.repair"
+	          benchmarks.analysis_bench, repro.kernels.noc_step, \
+	          repro.trace, repro.faults, repro.faults.repair, \
+	          repro.analysis.fabric, repro.analysis.lint_jax"
 
 # CI-sized benchmark: small sim grids (including the experiment_grid_smoke
 # table — one Experiment.run_grid over the collective + weighted-hotspot

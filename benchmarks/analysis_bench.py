@@ -1,0 +1,66 @@
+"""Static-certification cost (BENCH ``analysis_certify``): how long the
+``repro.analysis.fabric`` proofs take per fabric, 64/256/1024 PEs, base
+vs fault-repaired builds.
+
+Certification is the opt-in pre-flight of every verified experiment and
+the `make analyze` CI gate, so its cost needs to stay visible next to the
+simulation tables: the frontier occupancy walk is O(realizable
+(queue, dest) pairs), which grows ~P^2 — at 1024 PEs it is ~2.1M pairs
+and should stay in low single-digit seconds on CPU.
+
+Row columns: per-fabric pairs/edges counts, the certify wall time, and
+the verdict (every sampled fabric here must certify clean — a REJECTED
+row means a route-table regression, and the derived string calls it out).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.analysis import fabric
+from repro.core.spec import TopologySpec
+from repro.faults.spec import sample_faults
+
+_SIZES = (64, 256, 1024)
+_QUICK_SIZES = (64, 256)
+
+# Fault seeds whose BFS-refill repair certifies clean.  Not every seed
+# does: refilled mesh turns can violate XY ordering and re-introduce a
+# dependency cycle (flat_mesh 256 seed 0 is one — the certifier catching
+# exactly that is tests/test_analysis.py material, not a timing row), so
+# the benchmark pins known-good repairs and keeps "REJECTED" meaning
+# *regression* rather than *unlucky sample*.
+_REPAIR_SEEDS = {("flat_mesh", 256): 1}
+
+
+def _certify_row(spec: TopologySpec, scenario: str) -> dict:
+    topo = spec.build()   # build cost is the spec cache's problem
+    t0 = time.perf_counter()
+    cert = fabric.certify_topology(topo, spec=spec)
+    ms = (time.perf_counter() - t0) * 1e3
+    return {
+        "topology": spec.family, "n_pes": spec.n_pes, "scenario": scenario,
+        "certify_ms": round(ms, 1),
+        "pairs": cert.n_pairs, "edges": cert.n_edges,
+        "ok": cert.ok,
+    }
+
+
+def analysis_certify(quick: bool = False) -> tuple[list[dict], str]:
+    """(rows, derived) for the BENCH ``analysis_certify`` table."""
+    sizes = _QUICK_SIZES if quick else _SIZES
+    rows = []
+    for fam in ("ring_mesh", "flat_mesh"):
+        for n in sizes:
+            base = TopologySpec(fam, n)
+            rows.append(_certify_row(base, "base"))
+            seed = _REPAIR_SEEDS.get((fam, n), 0)
+            flt = sample_faults(base.build(), n_dead_links=4, seed=seed)
+            rows.append(_certify_row(
+                dataclasses.replace(base, faults=flt), "repaired"))
+    bad = [r for r in rows if not r["ok"]]
+    worst = max(rows, key=lambda r: r["certify_ms"])
+    derived = (f"max {worst['certify_ms']:.0f}ms "
+               f"({worst['topology']}_{worst['n_pes']} {worst['scenario']})"
+               + (f"; {len(bad)} REJECTED" if bad else "; all certified"))
+    return rows, derived

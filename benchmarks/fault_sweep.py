@@ -113,7 +113,6 @@ def fault_tolerance(sizes=(64, 256, 1024), quick: bool = False):
 def watchdog_demo(n_pes: int = 16, watchdog: int = 64):
     """(rows, derived) for the BENCH ``fault_trace_watchdog`` table."""
     spec = _spec("ring_mesh", n_pes)
-    topo = spec.build()
     # Phase 0 stays inside ringlet 0 and completes; phase 1 must cross
     # blocks through ringlet 0's router — killed, so it can never retire.
     trace = tr.from_records(n_pes, [[(0, 1, 4), (2, 3, 4)],

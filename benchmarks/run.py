@@ -24,7 +24,8 @@ import time
 
 import jax
 
-from benchmarks import fault_sweep, kernel_micro, noc_tables, serial_baseline
+from benchmarks import analysis_bench, fault_sweep, kernel_micro, \
+    noc_tables, serial_baseline
 from benchmarks import trace_replay as trace_replay_mod
 from repro.core import sweep
 
@@ -154,6 +155,8 @@ def main() -> None:
         ("fault_tolerance", fault_sweep.fault_tolerance,
          {"quick": args.quick}, False),
         ("fault_trace_watchdog", fault_sweep.watchdog_demo, {}, False),
+        ("analysis_certify", analysis_bench.analysis_certify,
+         {"quick": args.quick}, False),
         ("paper_validation_c1_c8", noc_tables.paper_validation, {}, False),
     ]
 
@@ -176,7 +179,7 @@ def main() -> None:
             tbl["compile_cache"] = stats
             if not args.no_baseline:
                 t0 = time.perf_counter()
-                base_rows = serial_baseline.figs15_17_serial(
+                serial_baseline.figs15_17_serial(
                     sizes=scal_sizes, cycles=900)
                 base_s = time.perf_counter() - t0
                 speedup_cold = base_s / tbl["cold_s"]

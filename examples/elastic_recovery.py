@@ -68,7 +68,6 @@ def main():
     assert diff == 0.0
 
     # --- 2. elastic rescale: restore into a resharded target -----------------
-    devs = jax.devices()
     from jax.sharding import NamedSharding, PartitionSpec as P
     mesh = jax.make_mesh((1,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,33 @@
+"""Static analysis for the Ring-Mesh repo: fabric certification
+(deadlock freedom, route liveness — ``analysis.fabric``) and the JAX
+hot-path linter (``analysis.lint_jax``).  Both run from the CLI::
+
+    PYTHONPATH=src python -m repro.analysis.fabric
+    PYTHONPATH=src python -m repro.analysis.lint_jax
+
+and together form the `make analyze` CI gate.
+
+Re-exports are lazy so ``python -m repro.analysis.fabric`` does not
+double-import the submodule (runpy warns when the package eagerly loads
+the module being executed)."""
+
+_FABRIC_API = ("CertificationError", "FabricCertificate", "PropertyResult",
+               "certify", "certify_topology", "dependency_cycle",
+               "require_certified", "walk_terminals")
+_LINT_API = ("LintFinding", "lint_paths", "lint_source")
+
+__all__ = list(_FABRIC_API + _LINT_API) + ["fabric", "lint_jax"]
+
+
+def __getattr__(name: str):
+    # importlib (not `from ... import`): a from-import re-enters this
+    # __getattr__ via _handle_fromlist and would recurse.
+    import importlib
+
+    if name in _FABRIC_API or name == "fabric":
+        mod = importlib.import_module("repro.analysis.fabric")
+        return mod if name == "fabric" else getattr(mod, name)
+    if name in _LINT_API or name == "lint_jax":
+        mod = importlib.import_module("repro.analysis.lint_jax")
+        return mod if name == "lint_jax" else getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

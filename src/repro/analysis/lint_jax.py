@@ -1,0 +1,484 @@
+"""JAX hot-path linter: an AST pass over ``src/`` that catches the
+performance/correctness hazards this repo has actually hit.
+
+The sweep engine stakes everything on two invariants: the per-cycle math
+(``kernels/noc_step.cycle_step`` and the functions jitted around it) must
+stay traceable — no host syncs, no Python branching on tracer values —
+and the jit compile keys (``_run_single``/``_run_batch`` static args)
+must be hashable and value-stable, or every grid point silently
+recompiles.  Both failure modes pass the test suite (results stay
+correct) and only show up as multi-minute sweeps; a static pass is the
+cheap place to catch them.
+
+Rules
+-----
+* **JAX001 host-sync** — ``.item()``, ``float(x)``/``int(x)`` of an
+  array-like, or ``np.asarray``/``np.array`` inside a hot path: each one
+  blocks on device->host transfer per call (per *cycle*, once traced
+  code falls back to op-by-op).  Shape arithmetic is exempt
+  (``int(x.shape[0])`` is static).
+* **JAX002 tracer-branch** — ``if``/``while`` on an expression that
+  mentions a (non-static) parameter of a hot function: Python control
+  flow forces concretization, which raises under ``jit`` only on the
+  *traced* path — often long after the code "worked" in eager tests.
+  ``x is None`` tests (static trace-time structure), branches on
+  int/bool/str-annotated parameters (static args by convention), and
+  shape/len/isinstance tests are exempt.
+* **JAX003 static-hazard** — ``static_argnames`` entries that are
+  float-annotated or have float/mutable defaults (a float static makes
+  every new value a fresh compile cache entry — rates belong in the
+  traced ``SweepPoint``), annotated with an unhashable type, or that
+  name no parameter of the jitted function.
+* **JAX004 mutable-default** — a dataclass field whose default is a
+  mutable literal (``= []`` / ``= {}``): shared across instances, and
+  it breaks the frozen specs' hashability contract (B006-class; ruff
+  only sees function defaults).
+
+Hot paths are: functions wrapped in ``jax.jit`` (decorator or
+``name = jax.jit(fn, ...)`` assignment), functions named ``cycle_step``
+/ ``run_fused`` / ``*_kernel`` (the kernel naming convention), and
+everything lexically nested inside one.
+
+Audited exceptions live in ``analysis/lint_allowlist.txt`` as
+``path-suffix:RULE:qualname`` lines (``*`` wildcards the qualname);
+every entry should carry a comment saying *why* the finding is safe.
+
+CLI (the `make analyze` gate)::
+
+    PYTHONPATH=src python -m repro.analysis.lint_jax src
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Optional
+
+RULES = {
+    "JAX001": "host sync in hot path",
+    "JAX002": "python branch on traced value in hot path",
+    "JAX003": "recompile-hazard static arg",
+    "JAX004": "mutable dataclass field default",
+}
+
+# Names that make a function hot by convention (plus anything jitted).
+_HOT_NAMES = ("cycle_step", "run_fused")
+_HOT_SUFFIX = "_kernel"
+
+# Annotations that mark a parameter static-by-convention (jit static args
+# and python-level config): branching on these is trace-safe.
+_STATIC_ANNOTATIONS = {"int", "bool", "str", "Optional[int]", "Optional[str]",
+                       "Optional[bool]", "int | None", "str | None",
+                       "bool | None"}
+
+# Attribute/name mentions that mean "shape arithmetic", which is static
+# under tracing.
+_SHAPE_WORDS = ("shape", "ndim", "size", "dtype")
+
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__),
+                                 "lint_allowlist.txt")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    qualname: str
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{RULES[self.rule]}] in `{self.qualname}`: {self.message}")
+
+
+# ---------------------------------------------------------------------------
+# Small AST helpers.
+# ---------------------------------------------------------------------------
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Attribute/Name chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    """``jax.jit(...)`` or ``functools.partial(jax.jit, ...)``."""
+    name = _dotted(call.func)
+    if name in ("jax.jit", "jit", "pjit", "jax.pjit"):
+        return True
+    if name in ("functools.partial", "partial") and call.args:
+        return _dotted(call.args[0]) in ("jax.jit", "jit", "pjit", "jax.pjit")
+    return False
+
+
+def _jit_static_names(call: ast.Call) -> list[str]:
+    inner = call
+    if _dotted(call.func) in ("functools.partial", "partial") and call.args:
+        inner = call
+    for kw in inner.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            if kw.arg == "static_argnums":
+                return []  # positional statics: nothing to name-check
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)]
+    return []
+
+
+def _mentions_shape(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _SHAPE_WORDS:
+            return True
+        if isinstance(sub, ast.Call):
+            f = _dotted(sub.func)
+            if f in ("len", "isinstance", "hasattr", "getattr", "type"):
+                return True
+    return False
+
+
+def _is_none_test(node: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` (or a pure bool-op of such):
+    trace-time *structure*, not a traced value."""
+    if isinstance(node, ast.BoolOp):
+        return all(_is_none_test(v) for v in node.values)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+        return _is_none_test(node.operand)
+    return (isinstance(node, ast.Compare)
+            and len(node.ops) == 1
+            and isinstance(node.ops[0], (ast.Is, ast.IsNot))
+            and isinstance(node.comparators[0], ast.Constant)
+            and node.comparators[0].value is None)
+
+
+def _annotation_str(ann: Optional[ast.AST]) -> str:
+    if ann is None:
+        return ""
+    try:
+        return ast.unparse(ann)
+    except Exception:
+        return ""
+
+
+def _mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return _dotted(node.func) in ("list", "dict", "set", "bytearray")
+    return False
+
+
+def _func_params(fn) -> list[ast.arg]:
+    a = fn.args
+    return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+
+
+def _traced_params(fn) -> set[str]:
+    """Parameter names of ``fn`` that may hold tracers: everything except
+    self/cls and parameters whose annotation marks them static."""
+    out = set()
+    for arg in _func_params(fn):
+        if arg.arg in ("self", "cls"):
+            continue
+        if _annotation_str(arg.annotation) in _STATIC_ANNOTATIONS:
+            continue
+        out.add(arg.arg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The linter.
+# ---------------------------------------------------------------------------
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.findings: list[LintFinding] = []
+        self.fn_stack: list[tuple[str, bool]] = []   # (name, hot)
+        self.traced: list[set[str]] = []             # traced params per frame
+        # Functions jitted by assignment: `_run_single = jax.jit(_run_core)`.
+        self.jitted_names: set[str] = set()
+        self.jit_calls: list[ast.Call] = []
+        self.func_defs: dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.func_defs.setdefault(node.name, node)
+            if isinstance(node, ast.Call) and _is_jit_call(node):
+                self.jit_calls.append(node)
+                # jax.jit(f, ...) / partial(jax.jit, ...)(f)? — only the
+                # direct form is used in this repo.
+                args = node.args
+                if _dotted(node.func) in ("functools.partial", "partial"):
+                    args = node.args[1:]
+                if args:
+                    target = _dotted(args[0])
+                    if target:
+                        self.jitted_names.add(target.split(".")[-1])
+
+    # -- hot-path bookkeeping ----------------------------------------------
+    def _in_hot(self) -> bool:
+        return any(hot for _, hot in self.fn_stack)
+
+    def _qualname(self) -> str:
+        return ".".join(n for n, _ in self.fn_stack) or "<module>"
+
+    def _is_hot_def(self, fn) -> bool:
+        if self._in_hot():
+            return True   # lexically nested in a hot function
+        if fn.name in _HOT_NAMES or fn.name.endswith(_HOT_SUFFIX):
+            return True
+        if fn.name in self.jitted_names:
+            return True
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call) and _is_jit_call(dec):
+                return True
+            if _dotted(dec) in ("jax.jit", "jit"):
+                return True
+        return False
+
+    def _emit(self, node: ast.AST, rule: str, msg: str) -> None:
+        self.findings.append(LintFinding(
+            path=self.path, line=getattr(node, "lineno", 0), rule=rule,
+            qualname=self._qualname(), message=msg))
+
+    # -- visitors -----------------------------------------------------------
+    def visit_FunctionDef(self, fn) -> None:
+        hot = self._is_hot_def(fn)
+        self.fn_stack.append((fn.name, hot))
+        self.traced.append(_traced_params(fn) if hot else set())
+        self.generic_visit(fn)
+        self.fn_stack.pop()
+        self.traced.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _traced_in(self, node: ast.AST) -> Optional[str]:
+        """A traced-parameter name mentioned in ``node`` (from any
+        enclosing hot frame), or None."""
+        names = set().union(*self.traced) if self.traced else set()
+        if not names:
+            return None
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in names:
+                return sub.id
+        return None
+
+    def _check_branch(self, node, test: ast.AST, kind: str) -> None:
+        if not self._in_hot():
+            return
+        if _is_none_test(test) or _mentions_shape(test):
+            return
+        name = self._traced_in(test)
+        if name is not None:
+            self._emit(node, "JAX002",
+                       f"`{kind}` on `{name}` — a traced value under jit; "
+                       f"use lax.cond/select, or mark it static")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._in_hot():
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "item":
+                self._emit(node, "JAX001",
+                           "`.item()` forces a device->host sync per call")
+            fname = _dotted(f)
+            if fname in ("float", "int", "bool") and len(node.args) == 1:
+                arg = node.args[0]
+                if (isinstance(arg, (ast.Name, ast.Attribute, ast.Subscript))
+                        and not _mentions_shape(arg)):
+                    self._emit(node, "JAX001",
+                               f"`{fname}()` of an array concretizes it "
+                               f"(host sync); shape arithmetic is exempt")
+            if fname in ("np.asarray", "np.array", "numpy.asarray",
+                         "numpy.array", "onp.asarray", "onp.array"):
+                self._emit(node, "JAX001",
+                           f"`{fname}` in a hot path pulls the operand to "
+                           f"host; use jnp instead")
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        is_dc = any("dataclass" in _dotted(d if not isinstance(d, ast.Call)
+                                           else d.func)
+                    for d in node.decorator_list)
+        if is_dc:
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign) and stmt.value is not None
+                        and _mutable_default(stmt.value)):
+                    self.findings.append(LintFinding(
+                        path=self.path, line=stmt.lineno, rule="JAX004",
+                        qualname=node.name,
+                        message="mutable default shared across instances; "
+                                "use dataclasses.field(default_factory=...)"))
+        self.generic_visit(node)
+
+    # -- whole-module checks ------------------------------------------------
+    def check_static_args(self) -> None:
+        for call in self.jit_calls:
+            args = call.args
+            if _dotted(call.func) in ("functools.partial", "partial"):
+                args = call.args[1:]
+            target = _dotted(args[0]).split(".")[-1] if args else ""
+            fn = self.func_defs.get(target)
+            statics = _jit_static_names(call)
+            if fn is None:
+                # decorator form: the FunctionDef this call decorates
+                fn = next((f for f in self.func_defs.values()
+                           if call in getattr(f, "decorator_list", ())
+                           or any(call is d or (isinstance(d, ast.Call)
+                                                and call is d)
+                                  for d in f.decorator_list)), None)
+            if fn is None or not statics:
+                continue
+            params = {a.arg: a for a in _func_params(fn)}
+            defaults = dict(zip([a.arg for a in fn.args.kwonlyargs],
+                                fn.args.kw_defaults))
+            qual = fn.name
+            for s in statics:
+                if s not in params:
+                    if fn.args.kwarg is None:
+                        self.findings.append(LintFinding(
+                            self.path, call.lineno, "JAX003", qual,
+                            f"static arg {s!r} names no parameter of "
+                            f"`{fn.name}`"))
+                    continue
+                ann = _annotation_str(params[s].annotation)
+                if "float" in ann:
+                    self.findings.append(LintFinding(
+                        self.path, params[s].lineno, "JAX003", qual,
+                        f"float static arg {s!r}: every distinct value is "
+                        f"a fresh compile; move it into traced data"))
+                elif any(t in ann for t in ("list", "List", "dict", "Dict",
+                                            "set", "Set", "ndarray",
+                                            "Array")):
+                    self.findings.append(LintFinding(
+                        self.path, params[s].lineno, "JAX003", qual,
+                        f"static arg {s!r} annotated {ann!r} is unhashable "
+                        f"— jit will raise or silently re-trace"))
+                dflt = defaults.get(s)
+                if dflt is not None and (
+                        _mutable_default(dflt)
+                        or (isinstance(dflt, ast.Constant)
+                            and isinstance(dflt.value, float))):
+                    self.findings.append(LintFinding(
+                        self.path, params[s].lineno, "JAX003", qual,
+                        f"static arg {s!r} has a float/mutable default"))
+
+
+def lint_source(source: str, path: str = "<string>") -> list[LintFinding]:
+    """Lint one module's source text; returns unfiltered findings."""
+    tree = ast.parse(source, filename=path)
+    linter = _Linter(path, tree)
+    linter.visit(tree)
+    linter.check_static_args()
+    return sorted(linter.findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# Allowlist + file walking.
+# ---------------------------------------------------------------------------
+def load_allowlist(path: Optional[str]) -> list[tuple[str, str, str]]:
+    """``(path_suffix, rule, qualname)`` entries; '*' wildcards the
+    qualname.  Missing file -> empty list."""
+    if path is None or not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as fh:
+        for raw in fh:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split(":")
+            if len(parts) != 3:
+                raise ValueError(
+                    f"{path}: bad allowlist line {raw.strip()!r} "
+                    f"(want path-suffix:RULE:qualname)")
+            entries.append((parts[0], parts[1], parts[2]))
+    return entries
+
+
+def _allowed(f: LintFinding, allow: list[tuple[str, str, str]]) -> bool:
+    norm = f.path.replace(os.sep, "/")
+    return any(norm.endswith(suffix) and f.rule == rule
+               and (qual == "*" or qual == f.qualname)
+               for suffix, rule, qual in allow)
+
+
+def iter_py_files(paths: list[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield os.path.join(root, name)
+
+
+def lint_paths(paths: list[str],
+               allowlist: Optional[str] = DEFAULT_ALLOWLIST
+               ) -> tuple[list[LintFinding], list[LintFinding]]:
+    """Lint files/trees; returns ``(reported, allowlisted)``."""
+    allow = load_allowlist(allowlist)
+    reported: list[LintFinding] = []
+    silenced: list[LintFinding] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        for f in lint_source(src, path):
+            (silenced if _allowed(f, allow) else reported).append(f)
+    return reported, silenced
+
+
+def main(argv: Optional[list] = None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint_jax",
+        description="JAX hot-path linter (host syncs, tracer branches, "
+                    "recompile-hazard statics, mutable dataclass defaults).")
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files or directories (default: src/ if present, "
+                        "else the repro package directory)")
+    p.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
+                   help="audited-exception file (default: the checked-in "
+                        "analysis/lint_allowlist.txt)")
+    p.add_argument("--no-allowlist", action="store_true",
+                   help="report allowlisted findings too")
+    args = p.parse_args(argv)
+
+    paths = args.paths
+    if not paths:
+        paths = ["src"] if os.path.isdir("src") else [
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))]
+    allowlist = None if args.no_allowlist else args.allowlist
+    reported, silenced = lint_paths(paths, allowlist)
+    for f in reported:
+        print(f.render())
+    if silenced:
+        print(f"# {len(silenced)} finding(s) allowlisted "
+              f"({args.allowlist})")
+    n_files = sum(1 for _ in iter_py_files(paths))
+    print(f"# lint_jax: {len(reported)} finding(s) in {n_files} files")
+    return 1 if reported else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

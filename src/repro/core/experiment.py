@@ -100,6 +100,12 @@ class Experiment:
     # geometry — vmappable, DESIGN.md §13).  Faults *repaired into* the
     # fabric belong on the TopologySpec instead.
     faults: Optional[FaultSpec] = None
+    # Opt-in static certification pre-flight (DESIGN.md §14): construction
+    # proves the built fabric deadlock-free and route-live
+    # (``analysis.fabric.require_certified``) before any cycle is
+    # simulated.  Certificates are cached on the spec, so a verified grid
+    # pays the proof once per geometry.
+    verify: bool = False
 
     def __post_init__(self):
         if not isinstance(self.topology, TopologySpec):
@@ -115,6 +121,9 @@ class Experiment:
             # Fail here, at construction, with the offending id named —
             # not as an opaque gather error inside a batched dispatch.
             self.faults.validate_against(self.topology.build())
+        if self.verify:
+            from repro.analysis import fabric
+            fabric.require_certified(self.topology)
         self.sim_config()  # surface budget/traffic conflicts eagerly too
 
     # -- execution ----------------------------------------------------------
@@ -162,6 +171,8 @@ class Experiment:
              "inj_rate": self.inj_rate, "seed": self.seed}
         if self.faults is not None:
             d["faults"] = self.faults.to_dict()
+        if self.verify:
+            d["verify"] = True
         return d
 
     def to_json(self) -> str:
@@ -174,7 +185,8 @@ class Experiment:
                    budget=Budget.from_dict(d["budget"]),
                    inj_rate=d["inj_rate"], seed=d["seed"],
                    faults=(FaultSpec.from_dict(d["faults"])
-                           if "faults" in d else None))
+                           if "faults" in d else None),
+                   verify=d.get("verify", False))
 
     @classmethod
     def from_json(cls, s: str) -> "Experiment":

@@ -161,6 +161,14 @@ class TopologySpec:
     def clear_build_cache() -> None:
         _BUILD_CACHE.clear()
 
+    def certify(self):
+        """Static certification of this spec's built fabric (deadlock
+        freedom, route liveness, table consistency — DESIGN.md §14);
+        returns the ``analysis.fabric.FabricCertificate``, memoized on
+        this spec alongside the geometry."""
+        from repro.analysis import fabric  # lazy: analysis imports spec
+        return fabric.certify(self)
+
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         d = {"family": self.family, "n_pes": self.n_pes,

@@ -146,13 +146,22 @@ def _dispatch(topo, cfgs, geom, idxs, points, exe, out):
 
 
 def sweep(topo: topo_mod.Topology,
-          cfgs: Sequence[sim.SimConfig]) -> list[sim.SimResult]:
+          cfgs: Sequence[sim.SimConfig],
+          verify: bool = False) -> list[sim.SimResult]:
     """Run every config on ``topo`` in batched device executions.
 
     Configs sharing (cycles, warmup, starvation_limit) — the static compile
     key — are executed as one vmapped dispatch; results return in the order
     of ``cfgs``.  Metrics are bit-identical to per-point ``sim.simulate``.
+
+    ``verify=True`` statically certifies the fabric first (deadlock
+    freedom + route liveness, ``analysis.fabric``) and raises
+    ``CertificationError`` before dispatching anything — the pre-flight
+    for long grids on morphed/repaired fabrics (DESIGN.md §14).
     """
+    if verify:
+        from repro.analysis import fabric
+        fabric.require_certified(topo)
     if not cfgs:
         return []
     geom, groups = _grouped(topo, cfgs)
@@ -242,9 +251,11 @@ def grid(inj_rates: Iterable[float] = (0.25,),
     return cfgs
 
 
-def sweep_grid(topo: topo_mod.Topology, **grid_kwargs) -> list[sim.SimResult]:
-    """Convenience: build a ``grid(**grid_kwargs)`` and ``sweep`` it."""
-    return sweep(topo, grid(**grid_kwargs))
+def sweep_grid(topo: topo_mod.Topology, verify: bool = False,
+               **grid_kwargs) -> list[sim.SimResult]:
+    """Convenience: build a ``grid(**grid_kwargs)`` and ``sweep`` it
+    (``verify=True`` runs the static certification pre-flight first)."""
+    return sweep(topo, grid(**grid_kwargs), verify=verify)
 
 
 def compile_stats() -> dict:

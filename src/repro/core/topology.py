@@ -137,6 +137,7 @@ class Topology:
         inject and eject buffer transfers, matching §6.1's link counting)."""
         l = self.pe_src_link[src]
         count = -1  # first move leaves the inject buffer: not a network link
+        seen: dict[int, int] = {}
         while True:
             nxt = self.route_table[l, dst]
             if nxt == INVALID:
@@ -144,31 +145,29 @@ class Topology:
             count += 1
             if self.link_kind[nxt] == EJECT:
                 return count
+            if int(nxt) in seen or count > max_hops:
+                # Report the actual queue cycle (the certifier's witness
+                # format: queue ids in route-walk order), not just the pair.
+                order = list(seen)
+                cycle = order[seen.get(int(nxt), 0):] or order
+                raise RuntimeError(
+                    f"routing loop {src}->{dst}: queue cycle {cycle}")
+            seen[int(nxt)] = len(seen)
             l = nxt
-            if count > max_hops:
-                raise RuntimeError(f"routing loop {src}->{dst}")
 
     def check_deadlock_free(self) -> bool:
         """Verify the *realizable* queue-dependency graph is acyclic — the
         Dally-Seitz condition.  Edges are collected by walking every
         (source, destination) route, so only dependencies an actual flit can
         exercise are included (the full table contains don't-care entries
-        for (queue, dest) pairs no flit ever occupies)."""
-        import networkx as nx
-        g = nx.DiGraph()
-        for src in range(self.n_pes):
-            for dst in range(self.n_pes):
-                if src == dst:
-                    continue
-                q = self.pe_src_link[src]
-                while True:
-                    nxt = self.route_table[q, dst]
-                    if nxt == INVALID or self.link_kind[nxt] == EJECT:
-                        break
-                    if self.link_kind[q] != PE_SRC:
-                        g.add_edge(int(q), int(nxt))
-                    q = nxt
-        return nx.is_directed_acyclic_graph(g)
+        for (queue, dest) pairs no flit ever occupies).
+
+        Thin shim over ``repro.analysis.fabric`` (which replaced the old
+        per-pair networkx walk with a vectorized frontier walk + Kahn's
+        algorithm); use ``fabric.certify`` directly for the full property
+        set and cycle witnesses."""
+        from repro.analysis import fabric
+        return fabric.dependency_cycle(self) is None
 
 
 class _Builder:
@@ -459,6 +458,12 @@ def _walk_classify(route: np.ndarray, is_sink: np.ndarray,
     for _ in range(int(np.ceil(np.log2(max(l_n, 2)))) + 1):
         ptr = np.take_along_axis(ptr, ptr, axis=0)
     return ptr[:l_n] == a_ok
+
+
+# Public name: repro.analysis.fabric (route-liveness certification) and
+# faults/repair build on this classification; `walk_terminals` over there
+# is the variant that also reports *where* each walk ends.
+walk_classify = _walk_classify
 
 
 def reachable_pairs(topo: Topology,

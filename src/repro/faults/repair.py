@@ -102,8 +102,21 @@ def measure_repair(spec: TopologySpec, faults: FaultSpec, *,
     ]
     healthy, faulted, repaired = exp_mod.run_experiments(exps)
     legs = {"healthy": healthy, "faulted": faulted, "repaired": repaired}
+    # Static certification of the repaired twin (DESIGN.md §14): the
+    # BFS-refilled route table has no paper proof behind it, and refilled
+    # turns *can* re-introduce dependency cycles — say so in the result
+    # instead of letting the repaired leg deadlock a later long run.
+    from repro.analysis import fabric
+    cert = fabric.certify(exps[2].topology)
     return {
         "scenario": faults.to_dict(),
+        "certified": {
+            "ok": cert.ok,
+            "deadlock_free": cert.prop("deadlock_free").ok,
+            "route_liveness": cert.prop("route_liveness").ok,
+            "witness": [dict(w) for p in cert.failures()
+                        for w in p.witness[:1]],
+        },
         "delivered_fraction": {k: round(r.delivered_fraction, 4)
                                for k, r in legs.items()},
         "reachability": {k: round(r.reachability, 4)

@@ -120,7 +120,6 @@ def stage_probe(cfg: ModelConfig, cell: shp.Cell, mesh, stage_idx: int,
         cache_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
                                 full_specs)
 
-    positions = jnp.arange(s) if not is_decode else None
 
     def fwd(x, p, mem, shared, cache):
         pos = jnp.int32(cell.seq_len - 1) if is_decode else None
@@ -228,11 +227,8 @@ def loss_embed_probe(cfg: ModelConfig, cell: shp.Cell, mesh) -> dict:
             from repro.models import model as MM
             x = pp["embed"].astype(jnp.bfloat16)[tokens]
             x = MM.constrain_activation(zero_cfg, x)
-            fake = dict(pp)
-            batch_cfg = dc.replace(zero_cfg, tie_embeddings=False)
             # reuse loss tail: norm + vocab-chunked CE
             hidden = L.apply_norm(zero_cfg, pp["final_norm"], x)
-            params = {"unembed": pp["unembed"], "embed": pp["embed"]}
             v = cfg.vocab
             vc = min(v, max(16384, -(-v // 16)))
             m_run = jnp.full((b, s), -jnp.inf, jnp.float32)

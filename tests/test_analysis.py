@@ -1,0 +1,433 @@
+"""Static-analysis tests (DESIGN.md §14): fabric certification — deadlock
+freedom, route liveness, table consistency over base / morphed / repaired
+builds, with concrete witnesses for seeded defects — and the JAX hot-path
+linter (host syncs, tracer branches, recompile-hazard statics, mutable
+dataclass defaults, allowlist policy)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis import fabric, lint_jax
+from repro.core import sweep, topology
+from repro.core.experiment import Budget, Experiment
+from repro.core.spec import MorphOverlay, TopologySpec
+from repro.faults import measure_repair, sample_faults
+
+_SPEC = TopologySpec("ring_mesh", 16)
+
+# A ring-direction bypass wraps ring hops around the dateline: a genuine
+# routing loop AND a dependency cycle — the certifier's canonical reject.
+_CYCLIC_MORPH = TopologySpec(
+    "ring_mesh", 16,
+    morphs=(MorphOverlay(hl=0, target=3,
+                         link_states=(1, 1, 0, 0, 0, 0, 0, 0)),))
+
+
+def _loop_seeded(dst=15, src=0):
+    """A fresh ring_mesh_16 whose route table is mutated so the src->dst
+    walk falls into a 3-queue cycle; returns (topo, dst, cycle_queues)."""
+    topo = _SPEC.build_fresh()
+    q = int(topo.pe_src_link[src])
+    walk = []
+    while True:
+        q = int(topo.route_table[q, dst])
+        if topo.is_sink[q]:
+            break
+        walk.append(q)
+    assert len(walk) >= 3
+    topo.route_table[walk[-1], dst] = walk[-3]
+    return topo, dst, walk[-3:]
+
+
+# ---------------------------------------------------------------------------
+# Certification: pristine fabrics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["ring_mesh", "flat_mesh"])
+@pytest.mark.parametrize("n", [16, 64])
+def test_base_fabrics_certify_clean(family, n):
+    cert = TopologySpec(family, n).certify()
+    assert cert.ok
+    for name in fabric.PROPERTIES:
+        assert cert.prop(name).ok, cert.summary()
+    # Pristine build: VC discipline is *required*, not waived.
+    assert not cert.prop("vc_discipline").waived
+    live = cert.prop("route_liveness").data
+    assert live["severed"] == 0 and live["looped"] == 0
+    assert live["reachable_frac"] == 1.0
+
+
+def test_certificate_counts_and_spec_recorded():
+    cert = fabric.certify(_SPEC, use_cache=False)
+    t = _SPEC.build()
+    # Full all-to-all occupancy of a pristine fabric covers >= P^2 pairs
+    # (every dest must be able to sit in every inject buffer's walk).
+    assert cert.n_pairs >= t.n_pes ** 2
+    assert cert.n_edges > 0 and cert.n_links == t.n_links
+    assert cert.spec == _SPEC.to_dict()
+    assert "CERTIFIED" in cert.summary()
+
+
+def test_certify_cache_hits_on_spec():
+    fabric.clear_certificate_cache()
+    c1 = fabric.certify(_SPEC)
+    c2 = fabric.certify(_SPEC)
+    assert c1 is c2 and fabric.certificate_cache_size() == 1
+    # Bare Topology targets are never cached (mutable route table).
+    fabric.certify(_SPEC.build())
+    assert fabric.certificate_cache_size() == 1
+    fabric.clear_certificate_cache()
+
+
+def test_certify_rejects_unknown_target():
+    with pytest.raises(TypeError, match="TopologySpec or Topology"):
+        fabric.certify("ring_mesh_16")
+
+
+# ---------------------------------------------------------------------------
+# Certification: morph overlays
+# ---------------------------------------------------------------------------
+def test_safe_morphs_certify_with_waived_vc():
+    spec = TopologySpec(
+        "ring_mesh", 64,
+        morphs=(MorphOverlay(hl=1, target=1,
+                             link_states=(1, 1, 0, 0, 0, 0, 0, 0)),))
+    cert = spec.certify()
+    assert cert.ok
+    # Morphs trade the VC dateline for connectivity: reported, waived.
+    assert cert.prop("vc_discipline").waived
+    # Severed pairs are legal under morphs (§5.1 drop semantics) ...
+    assert cert.prop("route_liveness").data["severed_violating"] == 0
+
+
+def test_cyclic_ring_bypass_rejected_with_cycle_witness():
+    cert = fabric.certify(_CYCLIC_MORPH, use_cache=False)
+    assert not cert.ok
+    dead = cert.prop("deadlock_free")
+    assert not dead.ok and dead.witness
+    w = dead.witness[0]
+    assert w["kind"] == "cycle" and len(w["queues"]) >= 2
+    # The witness must be a real cycle of realizable dependency edges.
+    topo = _CYCLIC_MORPH.build()
+    _, esrc, edst = fabric.occupancy_edges(topo)
+    edges = set(zip(esrc.tolist(), edst.tolist()))
+    qs = w["queues"]
+    for a, b in zip(qs, qs[1:] + qs[:1]):
+        assert (a, b) in edges, (qs, (a, b))
+    # ... and the looping pairs surface in the liveness property too.
+    live = cert.prop("route_liveness")
+    assert live.data["looped"] > 0
+    assert any(v["kind"] == "loop" and v["queues"] for v in live.witness)
+    assert "REJECTED" in cert.summary()
+
+
+def test_require_certified_raises_with_certificate():
+    with pytest.raises(fabric.CertificationError) as ei:
+        fabric.require_certified(_CYCLIC_MORPH, use_cache=False)
+    assert not ei.value.certificate.ok
+    assert "REJECTED" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Certification: seeded route-table defects (bare Topology)
+# ---------------------------------------------------------------------------
+def test_seeded_cycle_caught_with_witness():
+    topo, dst, cycle = _loop_seeded()
+    cert = fabric.certify_topology(topo)
+    assert not cert.ok
+    dead = cert.prop("deadlock_free")
+    assert not dead.ok
+    assert set(dead.witness[0]["queues"]) == set(cycle)
+    # dependency_cycle is the public single-call form of the same check.
+    found = fabric.dependency_cycle(topo)
+    assert found is not None and set(found) == set(cycle)
+    # The liveness loop witness names the exact queue cycle for (src, dst).
+    live = cert.prop("route_liveness")
+    loops = [w for w in live.witness if w["kind"] == "loop"]
+    assert loops and any(w["dst"] == dst for w in loops)
+    for w in loops:
+        qs = w["queues"]
+        for a, b in zip(qs, qs[1:] + qs[:1]):
+            assert int(topo.route_table[a, w["dst"]]) == b
+
+
+def test_seeded_severed_route_caught():
+    topo = _SPEC.build_fresh()
+    dst = 15
+    q = int(topo.route_table[topo.pe_src_link[0], dst])
+    topo.route_table[q, dst] = topology.INVALID
+    cert = fabric.certify_topology(topo)   # bare build: severed is a defect
+    live = cert.prop("route_liveness")
+    assert not cert.ok and not live.ok
+    assert live.data["severed_violating"] > 0
+    assert any(w["kind"] == "severed" and w["dst"] == dst
+               for w in live.witness)
+
+
+def test_non_node_local_entry_caught_by_consistency():
+    topo = TopologySpec("flat_mesh", 16).build_fresh()
+    # Point a mesh queue at a queue leaving a *different* node: breaks the
+    # structural fan-in invariant even if the walk still terminates.
+    q = int(np.nonzero(topo.link_kind == topology.MESH)[0][0])
+    node = topo.link_dst_node[q]
+    alien = int(np.nonzero((topo.link_src_node != node)
+                           & (topo.link_kind == topology.MESH))[0][0])
+    topo.route_table[q, :] = alien
+    cert = fabric.certify_topology(topo)
+    cons = cert.prop("table_consistency")
+    assert not cons.ok and cons.data["non_node_local"] > 0
+    assert any(w["kind"] == "non_node_local" for w in cons.witness)
+
+
+def test_walk_terminals_agrees_with_walk_classify():
+    topo = _SPEC.build()
+    term = fabric.walk_terminals(topo.route_table, topo.is_sink)
+    ok = topology.walk_classify(topo.route_table, topo.is_sink)
+    # On the (src, dst) surface the two walks must agree: delivered-to-a-
+    # sink exactly when walk_classify says the pair is live.
+    src_term = term[topo.pe_src_link]
+    sink_ext = np.concatenate([topo.is_sink, [False]])
+    delivered = sink_ext[np.clip(src_term, 0, topo.n_links)]
+    assert np.array_equal(delivered, ok[topo.pe_src_link])
+    # Every inject-buffer walk of the pristine fabric delivers to the
+    # destination's own eject queue.
+    assert np.array_equal(src_term,
+                          np.broadcast_to(topo.pe_eject_link[None, :],
+                                          (topo.n_pes, topo.n_pes)))
+
+
+# ---------------------------------------------------------------------------
+# Certification: fault-repaired fabrics
+# ---------------------------------------------------------------------------
+def test_repaired_fabric_certifies_against_declared_reachability():
+    base = TopologySpec("ring_mesh", 64)
+    flt = sample_faults(base.build(), n_dead_links=4, seed=0)
+    cert = fabric.certify(dataclasses.replace(base, faults=flt),
+                          use_cache=False)
+    assert cert.ok
+    live = cert.prop("route_liveness").data
+    assert live["declared_reachability"]
+    assert live["severed_violating"] == 0
+    assert live["undeclared_delivery"] == 0
+    assert cert.prop("vc_discipline").waived   # repairs break the dateline
+
+
+def test_bfs_refill_cycle_is_caught():
+    # Empirical defect the certifier exists for: BFS route refill can
+    # violate XY ordering and re-introduce a dependency cycle (flat_mesh
+    # 64, 4 dead links, seed 3 is a deterministic instance).
+    base = TopologySpec("flat_mesh", 64)
+    flt = sample_faults(base.build(), n_dead_links=4, seed=3)
+    cert = fabric.certify(dataclasses.replace(base, faults=flt),
+                          use_cache=False)
+    assert not cert.ok
+    dead = cert.prop("deadlock_free")
+    assert not dead.ok and dead.witness[0]["queues"]
+
+
+def test_measure_repair_reports_certification():
+    flt = sample_faults(_SPEC.build(), n_dead_links=2, seed=0)
+    out = measure_repair(_SPEC, flt, budget=Budget(cycles=300, warmup=0))
+    cert = out["certified"]
+    assert set(cert) == {"ok", "deadlock_free", "route_liveness", "witness"}
+    assert cert["ok"] and cert["deadlock_free"] and not cert["witness"]
+
+
+# ---------------------------------------------------------------------------
+# Certificate serialization
+# ---------------------------------------------------------------------------
+def test_certificate_json_roundtrip():
+    for cert in (fabric.certify(_SPEC, use_cache=False),
+                 fabric.certify(_CYCLIC_MORPH, use_cache=False)):
+        back = fabric.FabricCertificate.from_json(cert.to_json())
+        assert back.to_dict() == cert.to_dict()
+        assert back.ok == cert.ok
+        assert [p.witness for p in back.properties] == \
+               [p.witness for p in cert.properties]
+
+
+# ---------------------------------------------------------------------------
+# Integration: topology shim, hops witness, Experiment/sweep pre-flights
+# ---------------------------------------------------------------------------
+def test_check_deadlock_free_shim():
+    assert _SPEC.build().check_deadlock_free()
+    topo, _, _ = _loop_seeded()
+    assert not topo.check_deadlock_free()
+
+
+def test_hops_reports_queue_cycle_witness():
+    topo, dst, cycle = _loop_seeded()
+    with pytest.raises(RuntimeError, match="queue cycle") as ei:
+        topo.hops(0, dst)
+    assert str(cycle[0]) in str(ei.value)
+
+
+def test_experiment_verify_preflight():
+    exp = Experiment(topology=_SPEC, budget=Budget(cycles=200, warmup=0),
+                     verify=True)
+    assert exp.to_dict()["verify"]
+    assert Experiment.from_dict(exp.to_dict()) == exp
+    # Unverified experiments don't serialize the flag (stable hashes).
+    assert "verify" not in Experiment(
+        topology=_SPEC, budget=Budget(cycles=200, warmup=0)).to_dict()
+    with pytest.raises(fabric.CertificationError):
+        Experiment(topology=_CYCLIC_MORPH,
+                   budget=Budget(cycles=200, warmup=0), verify=True)
+
+
+def test_sweep_verify_preflight():
+    cfg = Experiment(topology=_SPEC,
+                     budget=Budget(cycles=200, warmup=0)).sim_config()
+    rs = sweep.sweep(_SPEC.build(), [cfg], verify=True)
+    assert len(rs) == 1
+    bad, _, _ = _loop_seeded()
+    with pytest.raises(fabric.CertificationError):
+        sweep.sweep(bad, [], verify=True)   # raises before dispatch
+
+
+def test_fabric_cli_single_family():
+    assert fabric.main(["--family", "ring_mesh", "--pes", "16"]) == 0
+
+
+def test_analyze_gate_grid_certifies_clean():
+    # The exact target set `make analyze` walks (config specs to 256 PEs
+    # + sampled morphs + sampled repairs) must certify clean.
+    targets = fabric._config_targets(256, True, True)
+    assert len(targets) >= 12
+    for label, spec in targets:
+        cert = fabric.certify(spec)
+        assert cert.ok, f"[{label}] {cert.summary()}"
+
+
+# ---------------------------------------------------------------------------
+# lint_jax: seeded violations
+# ---------------------------------------------------------------------------
+_SEEDED_HOT = '''
+import numpy as np
+
+def cycle_step(state, inj_rate: float, n: int):
+    total = state.sum()
+    if inj_rate > 0.5:            # JAX002: traced float param
+        total = total + 1
+    x = float(total)              # JAX001: concretizes an array
+    y = np.asarray(state)         # JAX001: host pull
+    z = state.mean().item()       # JAX001: device->host sync
+    if n > 3:                     # exempt: int-annotated (static) param
+        total = total * 2
+    if state is None:             # exempt: trace-time structure
+        return 0
+    if state.shape[0] > 2:        # exempt: shape arithmetic
+        total = total + n
+    return x, y, z, int(state.shape[1])
+'''
+
+
+def test_lint_catches_seeded_hot_path_violations():
+    fs = lint_jax.lint_source(_SEEDED_HOT, "seeded.py")
+    assert [f.rule for f in fs] == ["JAX002", "JAX001", "JAX001", "JAX001"]
+    assert all(f.qualname == "cycle_step" for f in fs)
+    assert "inj_rate" in fs[0].message
+    assert all("seeded.py:" in f.render() for f in fs)
+
+
+def test_lint_cold_functions_not_flagged():
+    src = '''
+def summarize(state):
+    return float(state.mean().item())   # fine: not a hot path
+'''
+    assert lint_jax.lint_source(src) == []
+
+
+def test_lint_jit_assignment_and_nesting_are_hot():
+    src = '''
+import jax
+
+def _core(state):
+    def inner(x):
+        return x.item()       # nested in a jitted function: hot
+    return inner(state)
+
+run = jax.jit(_core)
+'''
+    fs = lint_jax.lint_source(src)
+    assert [f.rule for f in fs] == ["JAX001"]
+    assert fs[0].qualname == "_core.inner"
+
+
+def test_lint_static_arg_hazards():
+    src = '''
+import jax
+
+def _run(core, rate: float, cycles: int):
+    return core
+
+_run_j = jax.jit(_run, static_argnames=("rate", "nope"))
+'''
+    fs = lint_jax.lint_source(src)
+    assert sorted(f.rule for f in fs) == ["JAX003", "JAX003"]
+    msgs = " | ".join(f.message for f in fs)
+    assert "float static arg" in msgs and "names no parameter" in msgs
+
+
+def test_lint_mutable_dataclass_default():
+    src = '''
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    xs: list = []
+    ok: tuple = ()
+'''
+    fs = lint_jax.lint_source(src)
+    assert [f.rule for f in fs] == ["JAX004"]
+    assert fs[0].qualname == "Spec"
+
+
+# ---------------------------------------------------------------------------
+# lint_jax: allowlist + repo gate
+# ---------------------------------------------------------------------------
+def test_lint_allowlist_silences_audited_findings(tmp_path):
+    mod = tmp_path / "seeded.py"
+    mod.write_text(_SEEDED_HOT)
+    allow = tmp_path / "allow.txt"
+    allow.write_text("# audited: test fixture\n"
+                     "seeded.py:JAX001:cycle_step\n")
+    reported, silenced = lint_jax.lint_paths([str(mod)],
+                                             allowlist=str(allow))
+    assert [f.rule for f in reported] == ["JAX002"]
+    assert len(silenced) == 3
+    # Without the allowlist everything is reported.
+    reported, silenced = lint_jax.lint_paths([str(mod)], allowlist=None)
+    assert len(reported) == 4 and not silenced
+
+
+def test_lint_cli_fails_on_seeded_hot_sync(tmp_path, capsys):
+    mod = tmp_path / "hot.py"
+    mod.write_text(_SEEDED_HOT)
+    assert lint_jax.main([str(mod), "--no-allowlist"]) == 1
+    out = capsys.readouterr().out
+    assert "JAX001" in out and ".item()" in out
+    clean = tmp_path / "cold.py"
+    clean.write_text("def helper(x):\n    return x + 1\n")
+    assert lint_jax.main([str(clean)]) == 0
+
+
+def test_lint_allowlist_rejects_malformed_line(tmp_path):
+    bad = tmp_path / "allow.txt"
+    bad.write_text("just-a-path\n")
+    with pytest.raises(ValueError, match="bad allowlist line"):
+        lint_jax.load_allowlist(str(bad))
+
+
+def test_lint_repo_src_is_clean():
+    # The `make analyze` contract: src/ lints clean modulo the checked-in
+    # audited allowlist (which must itself stay minimal and non-empty
+    # only for real, commented exceptions).
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(fabric.__file__))))
+    reported, silenced = lint_jax.lint_paths([src])
+    assert reported == [], "\n".join(f.render() for f in reported)
+    for f in silenced:
+        assert lint_jax._allowed(
+            f, lint_jax.load_allowlist(lint_jax.DEFAULT_ALLOWLIST))

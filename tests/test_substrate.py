@@ -40,7 +40,6 @@ def test_pipeline_labels_shifted():
 def test_pipeline_host_sharding_disjoint():
     """Hosts must consume disjoint documents: token streams differ and the
     union of docs is complete."""
-    full = DataConfig(vocab=100, seq_len=64, global_batch=4, num_hosts=1)
     h0 = DataConfig(vocab=100, seq_len=64, global_batch=4, num_hosts=2,
                     host_id=0)
     h1 = DataConfig(vocab=100, seq_len=64, global_batch=4, num_hosts=2,
